@@ -1,0 +1,21 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timed(fn, *args, repeat=3, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds*1e6:.1f},{derived}", flush=True)

@@ -1,0 +1,84 @@
+"""Experiment 1 (paper Table III): FCDCC vs naive single-node per ConvL.
+
+Reports per-layer: naive conv time, FCDCC per-worker compute time (the
+paper's distributed latency proxy: subtask time on one node), decode
+overhead, and float64 MSE vs the naive output.  Config (k_A,k_B)=(2,32),
+n=18, delta=16 as in the paper (``--quick`` shrinks n and the VGG input).
+"""
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.fcdcc import CodedConv2d, FcdccPlan  # noqa: E402
+from repro.models.cnn import CNN_SPECS, layer_geometry  # noqa: E402
+
+from .common import emit, timed  # noqa: E402
+
+
+def run(quick: bool = True):
+    n = 6 if quick else 18
+    k_a, k_b = 2, (8 if quick else 32)
+    plan = FcdccPlan(n=n, k_a=k_a, k_b=k_b)
+    rng = np.random.default_rng(0)
+
+    nets = {
+        "lenet5": 32,
+        "alexnet": 227 if not quick else 113,
+        "vgg16": 224 if not quick else 56,
+    }
+    for net, hw0 in nets.items():
+        hw = hw0
+        _, layers = CNN_SPECS[net]
+        for layer in layers:
+            if layer.out_ch % k_b:
+                kb_l = max(x for x in (1, 2, 4, 8) if layer.out_ch % x == 0)
+            else:
+                kb_l = k_b
+            lplan = FcdccPlan(n=n, k_a=k_a, k_b=kb_l)
+            geo = layer_geometry(layer, hw, k_a, kb_l)
+            x = jnp.asarray(rng.standard_normal((layer.in_ch, hw, hw)))
+            k = jnp.asarray(
+                rng.standard_normal((layer.out_ch, layer.in_ch, layer.kernel, layer.kernel))
+                / (layer.in_ch * layer.kernel**2) ** 0.5
+            )
+            coded = CodedConv2d(lplan, geo)
+
+            naive = jax.jit(
+                lambda x, k: jax.lax.conv_general_dilated(
+                    x[None], k, (layer.stride, layer.stride),
+                    ((layer.padding, layer.padding),) * 2,
+                    dimension_numbers=("NCHW", "OIHW", "NCHW"),
+                )[0]
+            )
+            t_naive = timed(naive, x, k)
+            y_naive = naive(x, k)
+
+            xe = coded.encode_inputs(x)
+            ke = coded.encode_filters(k)
+            worker = jax.jit(coded.worker_compute)
+            t_worker = timed(worker, xe[0], ke[0])
+
+            ids = list(range(lplan.delta))
+            outs = jax.vmap(coded.worker_compute)(xe[jnp.asarray(ids)], ke[jnp.asarray(ids)])
+            t_decode = timed(lambda o: coded.decode(ids, o), outs)
+            y = coded.decode(ids, outs)
+            mse = float(jnp.mean((y - y_naive) ** 2))
+            emit(
+                f"exp1/{net}/{layer.name}/naive", t_naive,
+                f"hw={hw}",
+            )
+            emit(
+                f"exp1/{net}/{layer.name}/fcdcc_worker", t_worker,
+                f"speedup={t_naive/t_worker:.1f}x mse={mse:.2e} decode_ms={t_decode*1e3:.2f}",
+            )
+            ho = geo.out_h
+            hw = ho // layer.pool if layer.pool > 1 else ho
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Experiment 3 (paper Fig. 5): scalability in (n, delta).
+
+Average completion time of AlexNet ConvLs under FCDCC as worker count n
+and recovery threshold delta grow (gamma = 4 fixed).  Simulated-clock
+cluster: per-subtask compute is measured (jitted, steady-state) and the
+master finishes at the delta-th fastest worker.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fcdcc import FcdccPlan
+from repro.models.cnn import CNN_SPECS, layer_geometry
+from repro.runtime import FcdccCluster, StragglerModel
+
+from .common import emit
+
+GRID = [(8, 4), (12, 8), (20, 16), (28, 24), (36, 32)]
+
+
+def run(quick: bool = True):
+    rng = np.random.default_rng(0)
+    # full spatial size even in quick mode: at small sizes per-subtask
+    # dispatch overhead (~ms) drowns the 1/Q workload trend of Fig. 5
+    hw0 = 227
+    _, layers = CNN_SPECS["alexnet"]
+    for n, delta in GRID:
+        # delta = k_a*k_b/4 -> pick k_a=2, k_b=2*delta
+        plan = FcdccPlan(n=n, k_a=2, k_b=2 * delta)
+        total = 0.0
+        hw = hw0
+        for layer in layers:
+            k_b = 2 * delta
+            if layer.out_ch % k_b:
+                k_b = max(x for x in range(1, layer.out_ch + 1)
+                          if layer.out_ch % x == 0 and (x == 1 or x % 2 == 0) and x <= 2 * delta)
+            lplan = FcdccPlan(n=n, k_a=2, k_b=k_b) if k_b != 2 * delta else plan
+            geo = layer_geometry(layer, hw, lplan.k_a, lplan.k_b)
+            x = jnp.asarray(rng.standard_normal((layer.in_ch, hw, hw)), jnp.float32)
+            kk = jnp.asarray(
+                rng.standard_normal((layer.out_ch, layer.in_ch, layer.kernel, layer.kernel)),
+                jnp.float32,
+            )
+            cluster = FcdccCluster(lplan, StragglerModel.none(n), mode="simulated")
+            _, t = cluster.run_layer(geo, x, kk)
+            total += t.compute_s
+            hw = geo.out_h // layer.pool if layer.pool > 1 else geo.out_h
+        emit(f"exp3/alexnet_n{n}_d{delta}", total, f"gamma={n-delta}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Experiment 4 (paper Fig. 6): robustness under straggler counts/delays.
+
+n=32 workers, delta=24 (gamma=8); stragglers 0..12 with 1s and 2s injected
+delays.  Completion time stays flat until stragglers exceed gamma — the
+paper's robustness result — then jumps by the injected delay.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fcdcc import FcdccPlan
+from repro.models.cnn import CNN_SPECS, layer_geometry
+from repro.runtime import FcdccCluster, StragglerModel
+
+from .common import emit
+
+
+def run(quick: bool = True):
+    n, delta = 32, 24
+    plan = FcdccPlan(n=n, k_a=2, k_b=2 * delta)
+    rng = np.random.default_rng(0)
+    hw = 57 if quick else 227
+    layer = CNN_SPECS["alexnet"][1][2]  # conv3 3x3
+    geo = layer_geometry(layer, hw, plan.k_a, plan.k_b)
+    x = jnp.asarray(rng.standard_normal((layer.in_ch, hw, hw)), jnp.float32)
+    k = jnp.asarray(
+        rng.standard_normal((layer.out_ch, layer.in_ch, layer.kernel, layer.kernel)),
+        jnp.float32,
+    )
+    for delay in (1.0, 2.0):
+        for s in (0, 2, 4, 6, 8, 10, 12):
+            cluster = FcdccCluster(
+                plan, StragglerModel.fixed(n, s, delay, seed=s), mode="simulated"
+            )
+            _, t = cluster.run_layer(geo, x, k)
+            tolerated = s <= plan.gamma
+            emit(
+                f"exp4/stragglers{s}_delay{delay:.0f}s", t.compute_s,
+                f"tolerated={tolerated}",
+            )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Experiment 5 (paper Fig. 7 + Table IV): optimal (k_A, k_B) per ConvL.
+
+Minimizes U(k_A,k_B) = C_comm + C_store (lambda_comp = 0, as in the paper)
+with AWS-pricing weights lambda_comm = 0.09, lambda_store = 0.023 over
+Q in {16, 32, 64} for LeNet-5 / AlexNet / VGGNet ConvLs, and checks the
+discrete optimum against Theorem 1's continuous solution.
+"""
+from __future__ import annotations
+
+from repro.core.cost import CostWeights, continuous_optimum, optimal_partition
+from repro.models.cnn import CNN_SPECS, layer_geometry
+
+from .common import emit
+
+W = CostWeights(comm=0.09, store=0.023, comp=0.0)
+
+
+def run(quick: bool = True):
+    for net in ("lenet5", "alexnet", "vgg16"):
+        hw0, layers = CNN_SPECS[net]
+        for q in (16, 32, 64):
+            hw = hw0
+            picks = []
+            for layer in layers:
+                geo = layer_geometry(layer, hw)
+                (ka, kb), cost, _ = optimal_partition(geo, q, W)
+                kc = continuous_optimum(geo, q, W)
+                picks.append(f"{layer.name}:({ka},{kb})")
+                emit(
+                    f"exp5/{net}/Q{q}/{layer.name}", 0.0,
+                    f"kA*={ka} kB*={kb} U={cost:.0f} kA_cont={kc:.1f}",
+                )
+                hw = geo.out_h // layer.pool if layer.pool > 1 else geo.out_h
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Benchmark harness: one experiment per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only exp1,exp5]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes (slow)")
+    ap.add_argument("--only", default=None, help="comma list: exp1..exp5,roofline")
+    args = ap.parse_args()
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import (
+        exp1_naive_vs_fcdcc,
+        exp2_stability,
+        exp3_scalability,
+        exp4_stragglers,
+        exp5_partition_opt,
+        roofline_report,
+    )
+
+    experiments = {
+        "exp1": exp1_naive_vs_fcdcc.run,
+        "exp2": exp2_stability.run,
+        "exp3": exp3_scalability.run,
+        "exp4": exp4_stragglers.run,
+        "exp5": exp5_partition_opt.run,
+        "roofline": roofline_report.run,
+    }
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in experiments.items():
+        if only and name not in only:
+            continue
+        try:
+            fn(quick=quick)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

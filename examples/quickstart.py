@@ -1,0 +1,47 @@
+"""Quickstart: one FCDCC-coded convolution, end to end.
+
+Shows the paper's full pipeline on a single layer: APCP/KCCP partitioning,
+CRME encoding, per-worker coded subtasks, straggler-tolerant decode —
+and checks the result against the plain convolution.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CodedConv2d, ConvGeometry, FcdccPlan
+
+# 6 workers; input split in 2 (spatial), filters in 4 (channels);
+# recovery threshold delta = 2*4/4 = 2 -> tolerates gamma = 4 stragglers.
+plan = FcdccPlan(n=6, k_a=2, k_b=4)
+geo = ConvGeometry(
+    in_channels=3, out_channels=8, height=32, width=32,
+    kernel_h=3, kernel_w=3, stride=1, padding=1, k_a=2, k_b=4,
+)
+layer = CodedConv2d(plan, geo)
+
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.standard_normal((3, 32, 32)), jnp.float32)
+k = jnp.asarray(rng.standard_normal((8, 3, 3, 3)), jnp.float32)
+
+print(f"n={plan.n} workers, delta={plan.delta}, tolerates gamma={plan.gamma}")
+
+# master: encode (filters would be pre-distributed once in deployment)
+xe = layer.encode_inputs(x)   # (n, 2, C, h_hat, W+2p)
+ke = layer.encode_filters(k)  # (n, 2, N/k_b, C, 3, 3)
+
+# workers: each computes its coded subtask
+outs = jax.vmap(layer.worker_compute)(xe, ke)
+
+# master: decode from ANY delta workers — pretend 4 of 6 straggled
+survivors = [5, 2]
+y = layer.decode(survivors, outs[jnp.asarray(survivors)])
+
+ref = jax.lax.conv_general_dilated(
+    x[None], k, (1, 1), ((1, 1), (1, 1)),
+    dimension_numbers=("NCHW", "OIHW", "NCHW"),
+)[0]
+print("output", y.shape, "max |err| =", float(jnp.max(jnp.abs(y - ref))))
+assert float(jnp.max(jnp.abs(y - ref))) < 1e-3
+print("coded result matches the plain convolution — straggler-proof.")

@@ -1,0 +1,22 @@
+"""Architecture registry: ``--arch <id>`` resolution for launchers/tests."""
+from importlib import import_module
+
+_MODULES = {
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "smollm-135m": "smollm_135m",
+    "gemma2-9b": "gemma2_9b",
+    "qwen3-4b": "qwen3_4b",
+    "hymba-1.5b": "hymba_1p5b",
+    "whisper-medium": "whisper_medium",
+    "rwkv6-1.6b": "rwkv6_1p6b",
+    "paligemma-3b": "paligemma_3b",
+}
+
+ARCH_IDS = list(_MODULES)
+
+
+def get_bundle(arch: str, *, smoke: bool = False, **kw):
+    mod = import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.smoke() if smoke else mod.full(**kw) if kw else mod.full()

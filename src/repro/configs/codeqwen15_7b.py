@@ -1,0 +1,38 @@
+"""CodeQwen1.5-7B — dense MHA (kv == heads) [hf:Qwen/CodeQwen1.5-7B]."""
+from repro.models.registry import make_lm_bundle
+from repro.models.transformer import LMConfig
+
+ARCH = "codeqwen1.5-7b"
+
+
+def full():
+    cfg = LMConfig(
+        name=ARCH,
+        layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=32,
+        head_dim=128,
+        d_ff=13440,
+        vocab=92416,
+        tie_embeddings=False,
+        rope_base=1000000.0,
+        max_seq=65536,
+    )
+    return make_lm_bundle(cfg)
+
+
+def smoke():
+    cfg = LMConfig(
+        name=ARCH + "-smoke",
+        layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab=256,
+        tie_embeddings=False,
+        max_seq=128,
+    )
+    return make_lm_bundle(cfg)

@@ -1,0 +1,50 @@
+"""DeepSeek-V3 671B — MLA + 1 shared + 256 routed top-8 MoE, 3 dense-first
+layers [arXiv:2412.19437; hf].  MTP head omitted (DESIGN.md §4)."""
+from repro.models.moe import MoEConfig
+from repro.models.registry import make_lm_bundle
+from repro.models.transformer import LMConfig, MLAConfig
+
+ARCH = "deepseek-v3-671b"
+
+
+def full(dispatch_groups: int = 16):
+    cfg = LMConfig(
+        name=ARCH,
+        layers=61,
+        d_model=7168,
+        n_heads=128,
+        n_kv_heads=128,
+        head_dim=128,
+        d_ff=18432,  # dense-first layers (hf); assigned d_ff=2048 is the expert width
+        vocab=129280,
+        attn="mla",
+        mla=MLAConfig(q_lora=1536, kv_lora=512, qk_nope_dim=128, qk_rope_dim=64, v_dim=128),
+        moe=MoEConfig(
+            n_routed=256, top_k=8, d_model=7168, d_ff_expert=2048, n_shared=1,
+            dispatch_groups=dispatch_groups,
+        ),
+        n_dense_layers=3,
+        tie_embeddings=False,
+        max_seq=32768,
+    )
+    return make_lm_bundle(cfg)
+
+
+def smoke():
+    cfg = LMConfig(
+        name=ARCH + "-smoke",
+        layers=4,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab=256,
+        attn="mla",
+        mla=MLAConfig(q_lora=32, kv_lora=32, qk_nope_dim=16, qk_rope_dim=8, v_dim=16),
+        moe=MoEConfig(n_routed=8, top_k=2, d_model=64, d_ff_expert=32, n_shared=1),
+        n_dense_layers=1,
+        tie_embeddings=False,
+        max_seq=128,
+    )
+    return make_lm_bundle(cfg)

@@ -1,0 +1,51 @@
+"""Gemma2-9B — local/global alternating windows, attn+logit softcaps,
+sandwich norms, scaled embeddings [arXiv:2408.00118; hf]."""
+from repro.models.registry import make_lm_bundle
+from repro.models.transformer import LMConfig
+
+ARCH = "gemma2-9b"
+
+
+def full():
+    cfg = LMConfig(
+        name=ARCH,
+        layers=42,
+        d_model=3584,
+        n_heads=16,
+        n_kv_heads=8,
+        head_dim=256,
+        d_ff=14336,
+        vocab=256000,
+        act="gelu",
+        attn_softcap=50.0,
+        logit_softcap=30.0,
+        window=4096,
+        window_pattern="alternate",
+        sandwich_norms=True,
+        embed_scale=True,
+        tie_embeddings=True,
+        max_seq=32768,
+    )
+    return make_lm_bundle(cfg)
+
+
+def smoke():
+    cfg = LMConfig(
+        name=ARCH + "-smoke",
+        layers=4,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab=256,
+        act="gelu",
+        attn_softcap=50.0,
+        logit_softcap=30.0,
+        window=16,
+        window_pattern="alternate",
+        sandwich_norms=True,
+        embed_scale=True,
+        max_seq=128,
+    )
+    return make_lm_bundle(cfg)

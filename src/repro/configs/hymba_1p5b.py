@@ -1,0 +1,39 @@
+"""Hymba-1.5B — parallel attention + mamba heads [arXiv:2411.13676; hf].
+Sub-quadratic (windowed attn + SSM) -> runs long_500k."""
+from repro.models.hymba import HymbaConfig
+from repro.models.registry import make_hymba_bundle
+
+ARCH = "hymba-1.5b"
+
+
+def full():
+    cfg = HymbaConfig(
+        name=ARCH,
+        layers=32,
+        d_model=1600,
+        n_heads=25,
+        n_kv_heads=5,
+        head_dim=64,
+        d_ff=5504,
+        vocab=32001,
+        ssm_state=16,
+        window=1024,
+    )
+    return make_hymba_bundle(cfg)
+
+
+def smoke():
+    cfg = HymbaConfig(
+        name=ARCH + "-smoke",
+        layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab=256,
+        ssm_state=8,
+        window=16,
+        chunk=8,
+    )
+    return make_hymba_bundle(cfg)

@@ -1,0 +1,41 @@
+"""PaliGemma-3B — SigLIP frontend stubbed as 256 prefix patch embeddings;
+gemma-1 2B text backbone (MQA kv=1) [arXiv:2407.07726; hf]."""
+from repro.models.registry import make_lm_bundle
+from repro.models.transformer import LMConfig
+
+ARCH = "paligemma-3b"
+
+
+def full():
+    cfg = LMConfig(
+        name=ARCH,
+        layers=18,
+        d_model=2048,
+        n_heads=8,
+        n_kv_heads=1,
+        head_dim=256,
+        d_ff=16384,
+        vocab=257216,
+        act="gelu",
+        embed_scale=True,
+        tie_embeddings=True,
+        max_seq=32768,
+    )
+    return make_lm_bundle(cfg, family="vlm")
+
+
+def smoke():
+    cfg = LMConfig(
+        name=ARCH + "-smoke",
+        layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=1,
+        head_dim=16,
+        d_ff=128,
+        vocab=256,
+        act="gelu",
+        embed_scale=True,
+        max_seq=128,
+    )
+    return make_lm_bundle(cfg, family="vlm")

@@ -1,0 +1,39 @@
+"""Qwen3-4B — GQA + per-head qk-norm [hf:Qwen/Qwen3-4B family]."""
+from repro.models.registry import make_lm_bundle
+from repro.models.transformer import LMConfig
+
+ARCH = "qwen3-4b"
+
+
+def full():
+    cfg = LMConfig(
+        name=ARCH,
+        layers=36,
+        d_model=2560,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=9728,
+        vocab=151936,
+        qk_norm=True,
+        tie_embeddings=True,
+        rope_base=1000000.0,
+        max_seq=32768,
+    )
+    return make_lm_bundle(cfg)
+
+
+def smoke():
+    cfg = LMConfig(
+        name=ARCH + "-smoke",
+        layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab=256,
+        qk_norm=True,
+        max_seq=128,
+    )
+    return make_lm_bundle(cfg)

@@ -1,0 +1,32 @@
+"""RWKV6-1.6B "Finch" — attention-free, data-dependent decay
+[arXiv:2404.05892].  O(1) recurrent state -> runs long_500k."""
+from repro.models.registry import make_rwkv_bundle
+from repro.models.rwkv6 import RwkvConfig
+
+ARCH = "rwkv6-1.6b"
+
+
+def full():
+    cfg = RwkvConfig(
+        name=ARCH,
+        layers=24,
+        d_model=2048,
+        d_ff=7168,
+        vocab=65536,
+        head_dim=64,
+    )
+    return make_rwkv_bundle(cfg)
+
+
+def smoke():
+    cfg = RwkvConfig(
+        name=ARCH + "-smoke",
+        layers=2,
+        d_model=64,
+        d_ff=128,
+        vocab=256,
+        head_dim=16,
+        decay_lora=8,
+        chunk=8,
+    )
+    return make_rwkv_bundle(cfg)

@@ -1,0 +1,69 @@
+"""Assigned input shapes and ShapeDtypeStruct builders for the dry-run.
+
+Every (arch x shape) cell resolves to a step kind:
+  train_4k    -> train_step   (loss + grads + optimizer update)
+  prefill_32k -> prefill_step (full-sequence logits)
+  decode_32k  -> serve_step   (1 new token against a seq_len KV cache)
+  long_500k   -> serve_step   (batch=1, 512k context; sub-quadratic archs only)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+
+    @property
+    def kind(self):
+        return SHAPES[self.shape]["kind"]
+
+
+def token_struct(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def batch_structs(bundle, shape_name: str, *, smoke_scale: int | None = None):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Returns (batch_dict, cache_or_None).  No device allocation.
+    """
+    sh = SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    if smoke_scale:
+        b, s = max(b // smoke_scale, 2), max(s // smoke_scale, 16)
+    kind = sh["kind"]
+    cfg = bundle.cfg
+
+    extras = {}
+    if bundle.family == "encdec":
+        d = cfg.d_model
+        extras["frames"] = jax.ShapeDtypeStruct((b, cfg.enc_len, d), jnp.bfloat16)
+    if bundle.family == "vlm":
+        extras["prefix"] = jax.ShapeDtypeStruct((b, 256, cfg.d_model), jnp.bfloat16)
+
+    if kind == "train":
+        batch = {"tokens": token_struct(b, s), "labels": token_struct(b, s), **extras}
+        return batch, None
+    if kind == "prefill":
+        batch = {"tokens": token_struct(b, s), **extras}
+        return batch, None
+    # decode: one new token against an s-long cache/state
+    batch = {
+        "tokens": token_struct(b, 1),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    cache = jax.eval_shape(lambda: bundle.make_cache(b, s))
+    return batch, cache

@@ -1,0 +1,38 @@
+"""SmolLM-135M — llama-arch small [hf:HuggingFaceTB/SmolLM-135M].
+9 heads / 3 kv heads do not divide model=16 -> those dims replicate
+(divisibility-aware sharding helper)."""
+from repro.models.registry import make_lm_bundle
+from repro.models.transformer import LMConfig
+
+ARCH = "smollm-135m"
+
+
+def full():
+    cfg = LMConfig(
+        name=ARCH,
+        layers=30,
+        d_model=576,
+        n_heads=9,
+        n_kv_heads=3,
+        head_dim=64,
+        d_ff=1536,
+        vocab=49152,
+        tie_embeddings=True,
+        max_seq=32768,
+    )
+    return make_lm_bundle(cfg)
+
+
+def smoke():
+    cfg = LMConfig(
+        name=ARCH + "-smoke",
+        layers=2,
+        d_model=48,
+        n_heads=3,
+        n_kv_heads=1,
+        head_dim=16,
+        d_ff=96,
+        vocab=256,
+        max_seq=128,
+    )
+    return make_lm_bundle(cfg)

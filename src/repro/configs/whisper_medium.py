@@ -1,0 +1,37 @@
+"""Whisper-medium backbone — enc-dec, conv frontend stubbed
+[arXiv:2212.04356].  Decode shapes run the decoder; long_500k skipped
+(full attention)."""
+from repro.models.registry import make_whisper_bundle
+from repro.models.whisper import WhisperConfig
+
+ARCH = "whisper-medium"
+
+
+def full():
+    cfg = WhisperConfig(
+        name=ARCH,
+        enc_layers=24,
+        dec_layers=24,
+        d_model=1024,
+        n_heads=16,
+        d_ff=4096,
+        vocab=51865,
+        enc_len=1500,
+        max_dec_len=32768,
+    )
+    return make_whisper_bundle(cfg)
+
+
+def smoke():
+    cfg = WhisperConfig(
+        name=ARCH + "-smoke",
+        enc_layers=2,
+        dec_layers=2,
+        d_model=64,
+        n_heads=4,
+        d_ff=128,
+        vocab=256,
+        enc_len=12,
+        max_dec_len=64,
+    )
+    return make_whisper_bundle(cfg)

@@ -1,0 +1,13 @@
+"""FCDCC core: CRME codes, NSCTC encode/decode, APCP/KCCP, cost model."""
+from .crme import (
+    CrmeAxisCode,
+    condition_number,
+    joint_columns,
+    make_axis_codes,
+    next_odd,
+    recovery_matrix,
+    rotation_matrix,
+)
+from .partition import ConvGeometry, apcp_partition, kccp_partition, merge_output
+from .fcdcc import CodedConv2d, FcdccPlan
+from .cost import CostWeights, cost_breakdown, optimal_partition

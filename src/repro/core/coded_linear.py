@@ -1,0 +1,83 @@
+"""CodedLinear: FCDCC applied to dense (1x1-conv) layers.
+
+This is the bridge claimed in DESIGN.md §4 between the paper's ConvL
+scheme and the transformer zoo: a linear layer ``Y = X W`` is the
+K_H = K_W = s = 1 case of the convolution —
+
+  * KCCP partitions W along its OUTPUT dim into k_b coded parts,
+  * APCP degenerates to disjoint row (token) partitioning of X into k_a
+    parts (no overlap because the "kernel" is 1x1 with stride 1),
+
+and the identical CRME encode / any-delta decode applies.  This is how the
+framework codes FFN/projection layers of the assigned LM architectures
+against stragglers (inference-time model parallelism with redundancy).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .crme import make_axis_codes, recovery_matrix
+from .fcdcc import FcdccPlan
+from .nsctc import encode_tensor_list, group_by_worker
+
+__all__ = ["CodedLinear"]
+
+
+class CodedLinear:
+    """Straggler-coded ``Y = X @ W``.
+
+    ``X``: (T, d_in) split into k_a row blocks; ``W``: (d_in, d_out) split
+    into k_b column blocks.  Each of n workers multiplies its ell_a coded
+    row blocks with its ell_b coded column blocks; any delta workers
+    reconstruct Y exactly.
+    """
+
+    def __init__(self, plan: FcdccPlan, t: int, d_in: int, d_out: int):
+        self.plan = plan
+        self.a_code, self.b_code = plan.codes
+        assert t % plan.k_a == 0, (t, plan.k_a)
+        assert d_out % plan.k_b == 0, (d_out, plan.k_b)
+        self.t, self.d_in, self.d_out = t, d_in, d_out
+        self.tb = t // plan.k_a
+        self.ob = d_out // plan.k_b
+
+    # -- master ---------------------------------------------------------
+    def encode_inputs(self, x: jnp.ndarray) -> jnp.ndarray:
+        parts = x.reshape(self.plan.k_a, self.tb, self.d_in)
+        coded = encode_tensor_list(parts, self.a_code.matrix)
+        return group_by_worker(coded, self.a_code.ell)  # (n, ell_a, tb, d_in)
+
+    def encode_weights(self, w: jnp.ndarray) -> jnp.ndarray:
+        parts = w.reshape(self.d_in, self.plan.k_b, self.ob).swapaxes(0, 1)
+        coded = encode_tensor_list(parts, self.b_code.matrix)
+        return group_by_worker(coded, self.b_code.ell)  # (n, ell_b, d_in, ob)
+
+    # -- worker -----------------------------------------------------------
+    def worker_compute(self, xe_i, we_i):
+        """(ell_a, tb, d_in) x (ell_b, d_in, ob) -> (ell_a*ell_b, tb, ob)."""
+        y = jnp.einsum("atd,bdo->abto", xe_i, we_i)
+        return y.reshape(
+            self.plan.ell_a * self.plan.ell_b, self.tb, self.ob
+        )
+
+    # -- master: decode ---------------------------------------------------
+    def decode(self, worker_ids, outputs):
+        e = recovery_matrix(self.a_code, self.b_code, list(worker_ids))
+        d = jnp.asarray(np.linalg.inv(e.T), outputs.dtype)
+        q = self.plan.k_a * self.plan.k_b
+        rows = outputs.reshape(q, -1)
+        blocks = (d @ rows).reshape(q, self.tb, self.ob)
+        grid = blocks.reshape(self.plan.k_a, self.plan.k_b, self.tb, self.ob)
+        return jnp.transpose(grid, (0, 2, 1, 3)).reshape(self.t, self.d_out)
+
+    def run_simulated(self, x, w, worker_ids=None):
+        ids = list(range(self.plan.delta)) if worker_ids is None else list(worker_ids)
+        xe = self.encode_inputs(x)
+        we = self.encode_weights(w)
+        idx = jnp.asarray(ids)
+        outs = jax.vmap(self.worker_compute)(xe[idx], we[idx])
+        return self.decode(ids, outs)

@@ -1,0 +1,84 @@
+"""Numerically Stable Coded Tensor Convolution (Sec. III).
+
+Tensor-list x matrix encoding (eq. 18), per-worker pairwise convolution
+subtasks (eq. 20/38), and decode-from-any-delta-workers (eq. 23/45).
+
+The code matrices are abstracted behind the light ``AxisCode`` protocol
+(``.k``, ``.ell``, ``.matrix``) so the same machinery runs CRME (the paper's
+scheme) and the real-Vandermonde / Chebyshev baselines in
+``core/baselines.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .crme import recovery_matrix
+
+__all__ = [
+    "encode_tensor_list",
+    "worker_outputs_to_matrix",
+    "decode_solve",
+    "decode_blocks",
+]
+
+
+def encode_tensor_list(parts: jnp.ndarray, matrix: np.ndarray) -> jnp.ndarray:
+    """``parts``: ``(k, *block)``; ``matrix``: ``(k, ell*n)``.
+
+    Returns the coded tensor list ``(n, ell, *block)`` (worker-major) — the
+    tensor-list x matrix product of eq. (18) with the per-worker grouping of
+    eq. (31)/(36).
+    """
+    k = parts.shape[0]
+    assert matrix.shape[0] == k, (parts.shape, matrix.shape)
+    m = jnp.asarray(matrix, dtype=parts.dtype)
+    return jnp.einsum("k...,kc->c...", parts, m)
+
+
+def group_by_worker(coded: jnp.ndarray, ell: int) -> jnp.ndarray:
+    """``(ell*n, *block)`` -> ``(n, ell, *block)``."""
+    total = coded.shape[0]
+    assert total % ell == 0
+    return coded.reshape((total // ell, ell) + coded.shape[1:])
+
+
+def worker_outputs_to_matrix(outputs: jnp.ndarray) -> jnp.ndarray:
+    """``(delta, ell2, *block)`` -> ``(delta*ell2, F)`` flattened rows."""
+    d, e2 = outputs.shape[:2]
+    return outputs.reshape(d * e2, -1)
+
+
+def decode_solve(e: np.ndarray, coded_rows: jnp.ndarray) -> jnp.ndarray:
+    """Solve ``E^T @ Y_true = Y_coded`` for the true block rows.
+
+    ``e``: recovery matrix ``(Q, Q)`` (numpy, float64 — factorized at trace
+    time); ``coded_rows``: ``(Q, F)``.  The inverse is taken in float64 on
+    the host (it is a tiny Q x Q constant of the program) and applied as a
+    single GEMM — the numerically-stable CRME structure is what keeps this
+    inversion well-conditioned.
+    """
+    d = np.linalg.inv(e.T)  # (Q, Q) float64 host-side
+    dm = jnp.asarray(d, dtype=coded_rows.dtype)
+    return dm @ coded_rows
+
+
+def decode_blocks(
+    a_code,
+    b_code,
+    worker_ids,
+    outputs: jnp.ndarray,
+    block_shape: tuple[int, ...],
+) -> jnp.ndarray:
+    """Full decode: coded worker outputs -> true T_C blocks.
+
+    ``outputs``: ``(delta, ell_a*ell_b, *block_shape)`` stacked in the same
+    order as ``worker_ids``.  Returns ``(k_a*k_b, *block_shape)`` ordered
+    A-major (``a * k_b + b``).
+    """
+    e = recovery_matrix(a_code, b_code, worker_ids)
+    rows = worker_outputs_to_matrix(outputs)
+    true_rows = decode_solve(e, rows)
+    q = a_code.k * b_code.k
+    return true_rows.reshape((q,) + tuple(block_shape))

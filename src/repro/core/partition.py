@@ -1,0 +1,160 @@
+"""APCP / KCCP tensor partitioning (Sec. IV-A/B) and merge (Sec. IV-D).
+
+Pure shape algebra + slicing; the coding lives in ``nsctc.py``.  Everything
+here is jit-safe (static shapes derived from a ``ConvGeometry``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ConvGeometry", "apcp_partition", "kccp_partition", "merge_output"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvGeometry:
+    """Static geometry of one coded convolution layer."""
+
+    in_channels: int
+    out_channels: int
+    height: int  # un-padded input H
+    width: int
+    kernel_h: int
+    kernel_w: int
+    stride: int = 1
+    padding: int = 0
+    k_a: int = 1
+    k_b: int = 1
+
+    # ---- derived quantities -------------------------------------------------
+    @property
+    def padded_h(self) -> int:
+        return self.height + 2 * self.padding
+
+    @property
+    def padded_w(self) -> int:
+        return self.width + 2 * self.padding
+
+    @property
+    def out_h(self) -> int:
+        return (self.padded_h - self.kernel_h) // self.stride + 1
+
+    @property
+    def out_w(self) -> int:
+        return (self.padded_w - self.kernel_w) // self.stride + 1
+
+    @property
+    def out_h_padded(self) -> int:
+        """H' rounded up to a multiple of k_a (zero-pad rule, Sec. IV-A1)."""
+        return -(-self.out_h // self.k_a) * self.k_a
+
+    @property
+    def out_h_block(self) -> int:
+        return self.out_h_padded // self.k_a
+
+    @property
+    def h_hat(self) -> int:
+        """Adaptive-padded slice height, eq. (24)."""
+        return (self.out_h_block - 1) * self.stride + self.kernel_h
+
+    @property
+    def s_hat(self) -> int:
+        """Slice stride (start-index step), eq. (25)."""
+        return self.out_h_block * self.stride
+
+    @property
+    def in_h_needed(self) -> int:
+        """Padded input height required so every slice is in-bounds."""
+        return (self.k_a - 1) * self.s_hat + self.h_hat
+
+    @property
+    def out_c_padded(self) -> int:
+        return -(-self.out_channels // self.k_b) * self.k_b
+
+    @property
+    def out_c_block(self) -> int:
+        return self.out_c_padded // self.k_b
+
+
+def apcp_partition(x: jnp.ndarray, geo: ConvGeometry) -> jnp.ndarray:
+    """Adaptive-Padding Partitioning (Algorithm 2, lines 1-8).
+
+    ``x``: un-padded input ``(C, H, W)``.  Applies the layer's conv padding
+    plus the bottom zero-pad that rounds H' up to a multiple of ``k_a``, then
+    slices ``k_a`` overlapping subtensors of height ``h_hat`` at stride
+    ``s_hat``.  Returns ``(k_a, C, h_hat, W + 2p)``.
+    """
+    c, h, w = x.shape
+    assert (c, h, w) == (geo.in_channels, geo.height, geo.width), (
+        (c, h, w),
+        geo,
+    )
+    p = geo.padding
+    bottom = max(geo.in_h_needed - (h + 2 * p), 0)
+    x = jnp.pad(x, ((0, 0), (p, p + bottom), (p, p)))
+    parts = [
+        x[:, i * geo.s_hat : i * geo.s_hat + geo.h_hat, :]
+        for i in range(geo.k_a)
+    ]
+    return jnp.stack(parts, axis=0)
+
+
+def kccp_partition(k: jnp.ndarray, geo: ConvGeometry) -> jnp.ndarray:
+    """Kernel-Channel Partitioning (Algorithm 3, lines 1-6).
+
+    ``k``: filter ``(N, C, K_H, K_W)`` -> ``(k_b, N/k_b, C, K_H, K_W)``
+    (N zero-padded up to a multiple of ``k_b`` if needed).
+    """
+    n, c, kh, kw = k.shape
+    assert (n, c, kh, kw) == (
+        geo.out_channels,
+        geo.in_channels,
+        geo.kernel_h,
+        geo.kernel_w,
+    )
+    pad = geo.out_c_padded - n
+    if pad:
+        k = jnp.pad(k, ((0, pad), (0, 0), (0, 0), (0, 0)))
+    return k.reshape(geo.k_b, geo.out_c_block, c, kh, kw)
+
+
+def merge_output(blocks: jnp.ndarray, geo: ConvGeometry) -> jnp.ndarray:
+    """Assemble decoded blocks into Y (Algorithm 5, steps 5-6).
+
+    ``blocks``: ``(k_a*k_b, N/k_b, H'/k_a, W')`` ordered A-major
+    (``index = a * k_b + b``, matching the T_C layout of eq. 13).
+    Returns ``(N, H', W')`` with channel/height padding stripped.
+    """
+    q = geo.k_a * geo.k_b
+    assert blocks.shape == (q, geo.out_c_block, geo.out_h_block, geo.out_w)
+    grid = blocks.reshape(
+        geo.k_a, geo.k_b, geo.out_c_block, geo.out_h_block, geo.out_w
+    )
+    # -> (k_b, N/k_b, k_a, H'/k_a, W') -> (N_padded, H'_padded, W')
+    y = jnp.transpose(grid, (1, 2, 0, 3, 4)).reshape(
+        geo.out_c_padded, geo.out_h_padded, geo.out_w
+    )
+    return y[: geo.out_channels, : geo.out_h, :]
+
+
+def block_output_shape(geo: ConvGeometry) -> tuple[int, int, int]:
+    return (geo.out_c_block, geo.out_h_block, geo.out_w)
+
+
+def np_reference_conv(x: np.ndarray, k: np.ndarray, stride: int, padding: int):
+    """Tiny O(N*C*H*W*KH*KW) NumPy oracle of eq. (1) for tests."""
+    c, h, w = x.shape
+    n, c2, kh, kw = k.shape
+    assert c == c2
+    xp = np.pad(x, ((0, 0), (padding, padding), (padding, padding)))
+    ho = (h + 2 * padding - kh) // stride + 1
+    wo = (w + 2 * padding - kw) // stride + 1
+    y = np.zeros((n, ho, wo), dtype=np.result_type(x, k))
+    for o in range(n):
+        for i in range(ho):
+            for j in range(wo):
+                patch = xp[:, i * stride : i * stride + kh, j * stride : j * stride + kw]
+                y[o, i, j] = np.sum(patch * k[o])
+    return y

@@ -1,0 +1,2 @@
+from .ops import coded_gemm, crme_decode, crme_encode
+from .ref import coded_gemm_ref

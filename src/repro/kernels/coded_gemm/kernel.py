@@ -1,0 +1,61 @@
+"""CRME encode/decode as a skinny GEMM Pallas kernel.
+
+Both NSCTC phases are ``small code matrix (Q x Q or k x 2n) @ wide feature
+matrix (rows x F)`` products.  The code matrix fits entirely in VMEM, so the
+kernel blocks only over the feature axis: grid = (F/bf,), each program does
+one (rows_out x rows_in) @ (rows_in x bf) MXU call and a single HBM write.
+This is the fused "tensor-list x matrix" primitive of eq. (18)/(45).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["coded_gemm_pallas"]
+
+
+def _coded_kernel(m_ref, t_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        m_ref[...], t_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bf", "interpret"))
+def coded_gemm_pallas(
+    code: jnp.ndarray,
+    feats: jnp.ndarray,
+    *,
+    bf: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """``code`` (R_out, R_in) @ ``feats`` (R_in, F) -> (R_out, F).
+
+    R_* are code dimensions (tiny, <= 8*128 keeps the whole code matrix in
+    one VMEM tile); F is the flattened tensor-block feature axis.
+    """
+    r_out, r_in = code.shape
+    r_in2, f = feats.shape
+    assert r_in == r_in2
+
+    r_out_p = -(-r_out // 8) * 8
+    r_in_p = -(-r_in // 8) * 8
+    bf_ = min(bf, -(-f // 128) * 128)
+    fp = -(-f // bf_) * bf_
+    code = jnp.pad(code, ((0, r_out_p - r_out), (0, r_in_p - r_in)))
+    feats = jnp.pad(feats, ((0, r_in_p - r_in), (0, fp - f)))
+
+    out = pl.pallas_call(
+        _coded_kernel,
+        grid=(fp // bf_,),
+        in_specs=[
+            pl.BlockSpec((r_out_p, r_in_p), lambda i: (0, 0)),
+            pl.BlockSpec((r_in_p, bf_), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((r_out_p, bf_), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((r_out_p, fp), feats.dtype),
+        interpret=interpret,
+    )(code, feats)
+    return out[:r_out, :f]

@@ -1,0 +1,28 @@
+"""Public encode/decode ops built on the coded-GEMM kernel."""
+import jax.numpy as jnp
+
+from .kernel import coded_gemm_pallas
+
+__all__ = ["crme_encode", "crme_decode", "coded_gemm"]
+
+
+def coded_gemm(code, feats, *, interpret=True, **kw):
+    return coded_gemm_pallas(code, feats, interpret=interpret, **kw)
+
+
+def crme_encode(parts, matrix, *, interpret=True):
+    """``parts`` (k, *block), ``matrix`` (k, ell*n) -> (ell*n, *block)."""
+    k = parts.shape[0]
+    rows = parts.reshape(k, -1)
+    m = jnp.asarray(matrix, dtype=parts.dtype)
+    out = coded_gemm_pallas(m.T, rows, interpret=interpret)
+    return out.reshape((m.shape[1],) + parts.shape[1:])
+
+
+def crme_decode(decode_matrix, coded, *, interpret=True):
+    """``decode_matrix`` (Q, Q) = inv(E^T); ``coded`` (Q, *block)."""
+    q = coded.shape[0]
+    rows = coded.reshape(q, -1)
+    d = jnp.asarray(decode_matrix, dtype=coded.dtype)
+    out = coded_gemm_pallas(d, rows, interpret=interpret)
+    return out.reshape(coded.shape)

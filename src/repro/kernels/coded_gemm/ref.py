@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the coded-GEMM kernel."""
+import jax.numpy as jnp
+
+
+def coded_gemm_ref(code, feats):
+    return jnp.dot(
+        code, feats, preferred_element_type=jnp.float32
+    ).astype(feats.dtype)

@@ -1,0 +1,2 @@
+from .ops import conv2d_im2col
+from .ref import conv2d_ref

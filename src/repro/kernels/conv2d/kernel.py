@@ -1,0 +1,43 @@
+"""Convolution as implicit GEMM for the TPU MXU.
+
+Hardware adaptation (DESIGN.md §3): the paper's workers run a black-box CPU
+convolution; on TPU the native form is im2col (done by XLA's
+``conv_general_dilated_patches``, a pure data-movement op) followed by an
+MXU-tiled GEMM (the Pallas matmul kernel).  The GEMM dims are
+``M = H'*W'`` (output pixels), ``K = C*K_H*K_W`` (patch), ``N = out
+channels`` — M and N are 128-padded inside the matmul kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.matmul.kernel import matmul_pallas
+
+__all__ = ["conv2d_im2col_pallas"]
+
+
+def conv2d_im2col_pallas(
+    x: jnp.ndarray,
+    k: jnp.ndarray,
+    stride: int = 1,
+    padding: int = 0,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """``x``: (C, H, W); ``k``: (N, C, KH, KW) -> (N, H', W')."""
+    c, h, w = x.shape
+    n, c2, kh, kw = k.shape
+    assert c == c2
+    patches = jax.lax.conv_general_dilated_patches(
+        x[None],
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # (1, C*KH*KW, H', W')
+    _, ck, ho, wo = patches.shape
+    lhs = patches[0].reshape(ck, ho * wo).T  # (M, K)
+    rhs = k.reshape(n, ck).T  # (K, N)
+    out = matmul_pallas(lhs, rhs, interpret=interpret)  # (M, N)
+    return out.T.reshape(n, ho, wo)

@@ -1,0 +1,8 @@
+"""Public conv op used by CodedConv2d's ``backend='pallas'`` path."""
+from .kernel import conv2d_im2col_pallas
+
+__all__ = ["conv2d_im2col"]
+
+
+def conv2d_im2col(x, k, stride=1, padding=0, *, interpret=True):
+    return conv2d_im2col_pallas(x, k, stride, padding, interpret=interpret)

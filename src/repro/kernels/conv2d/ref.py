@@ -1,0 +1,21 @@
+"""Pure-jnp direct convolution oracle (eq. 1)."""
+import jax.numpy as jnp
+
+
+def conv2d_ref(x, k, stride=1, padding=0):
+    """Naive O(N*H'*W'*C*KH*KW) einsum-based conv: x (C,H,W), k (N,C,KH,KW)."""
+    c, h, w = x.shape
+    n, _, kh, kw = k.shape
+    xp = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding)))
+    ho = (h + 2 * padding - kh) // stride + 1
+    wo = (w + 2 * padding - kw) // stride + 1
+    rows = []
+    for i in range(kh):
+        cols = []
+        for j in range(kw):
+            cols.append(
+                xp[:, i : i + stride * ho : stride, j : j + stride * wo : stride]
+            )
+        rows.append(jnp.stack(cols, axis=0))
+    patches = jnp.stack(rows, axis=0)  # (KH, KW, C, H', W')
+    return jnp.einsum("ijchw,ncij->nhw", patches, k)

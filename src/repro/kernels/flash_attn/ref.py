@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, scale=None, causal=True):
+    """q: (BH, Sq, D); k/v: (BH, Sk, D)."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v)

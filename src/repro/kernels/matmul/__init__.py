@@ -1,0 +1,2 @@
+from .ops import matmul
+from .ref import matmul_ref

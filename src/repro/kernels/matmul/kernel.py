@@ -1,0 +1,87 @@
+"""MXU-tiled matmul Pallas kernel.
+
+TPU mapping: blocks are multiples of (8, 128) fp32 register tiles; the MXU
+consumes 128x128 operands, so default blocks are 128-aligned.  Accumulation
+is fp32 in a VMEM scratch across the K grid dimension (innermost), written
+back once on the last K step — one HBM write per output tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["matmul_pallas"]
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "out_dtype")
+)
+def matmul_pallas(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+    out_dtype=None,
+) -> jnp.ndarray:
+    """``a @ b`` with explicit VMEM tiling.  Shapes padded to block grid.
+
+    ``interpret=True`` runs the kernel body in Python on CPU (this container
+    has no TPU); on real hardware pass ``interpret=False``.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    out_dtype = out_dtype or jnp.result_type(a.dtype, b.dtype)
+
+    bm_, bn_, bk_ = (min(bm, _ceil8(m)), min(bn, _ceil128(n)), min(bk, _ceil128(k)))
+    mp, np_, kp = _pad_to(m, bm_), _pad_to(n, bn_), _pad_to(k, bk_)
+    a = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    k_steps = kp // bk_
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=(mp // bm_, np_ // bn_, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return out[:m, :n]
+
+
+def _ceil8(x: int) -> int:
+    return -(-x // 8) * 8
+
+
+def _ceil128(x: int) -> int:
+    return -(-x // 128) * 128
+
+
+def _pad_to(x: int, b: int) -> int:
+    return -(-x // b) * b

@@ -1,0 +1,8 @@
+"""Jit'd public wrapper for the tiled matmul kernel."""
+from .kernel import matmul_pallas
+
+__all__ = ["matmul"]
+
+
+def matmul(a, b, *, interpret=True, **kw):
+    return matmul_pallas(a, b, interpret=interpret, **kw)

@@ -1,0 +1,350 @@
+"""Static HLO cost analyzer for the roofline.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so scanned
+layer stacks (and flash-attention inner scans) are undercounted by their
+trip counts.  This module parses the post-optimization HLO text and:
+
+  * multiplies while-loop bodies by their trip counts (from the
+    ``known_trip_count`` backend_config XLA attaches to scan-lowered loops),
+  * counts dot/convolution FLOPs exactly from shapes + contraction dims
+    (per-computation symbol table resolves operand shapes),
+  * recurses into fusion computations for their dots,
+  * models HBM bytes as operand+result buffer traffic of top-level ops
+    (one read per operand, one write per result — the fusion boundary is
+    where XLA spills to HBM),
+  * accumulates per-collective wire bytes with ring-collective factors:
+      all-reduce         2*S_in*(g-1)/g    (g = replica-group size)
+      all-gather         S_out*(g-1)/g
+      reduce-scatter     S_in*(g-1)/g
+      all-to-all         S_in*(g-1)/g
+      collective-permute S_in
+
+All byte counts are PER DEVICE (the HLO is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NO_TRAFFIC = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "rng-bit-generator",
+}
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _parse_shapes(text: str):
+    """All (dtype, dims) shapes in a type string."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append((dt, [int(d) for d in dims.split(",") if d], n))
+    return out
+
+
+def _bytes_of(text: str) -> int:
+    return sum(n * _DTYPE_BYTES[dt] for dt, _, n in _parse_shapes(text))
+
+
+def _elems_of(text: str) -> int:
+    shapes = _parse_shapes(text)
+    return shapes[0][2] if shapes else 0
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    dot_flops: float = 0.0
+
+    def __iadd__(self, other):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.collective_bytes += other.collective_bytes
+        self.dot_flops += other.dot_flops
+        for k, v in other.collectives.items():
+            self.collectives[k] += v
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        c = Cost(self.flops * f, self.bytes * f, self.collective_bytes * f,
+                 dot_flops=self.dot_flops * f)
+        c.collectives = defaultdict(
+            float, {k: v * f for k, v in self.collectives.items()}
+        )
+        return c
+
+    def as_dict(self):
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "collective_bytes": self.collective_bytes,
+            "dot_flops": self.dot_flops,
+            "collectives": dict(self.collectives),
+        }
+
+
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$")
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+# result type (tuple or array, lazily matched so "while(" is not swallowed)
+# followed by the opcode
+_OPCODE_RE = re.compile(
+    r"^(\(.*?\)|[\w\-]+\[[\d,]*\](?:\{[^}]*\})?(?:\s*:\s*\w+)?)\s+([\w\-]+)\("
+)
+
+
+def _split_computations(hlo: str):
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        if not line.startswith(" "):
+            m = _HEADER_RE.match(line.strip())
+            if m and "->" in line:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+        elif cur is not None and line.strip():
+            comps[cur].append(line.strip())
+    return comps, entry
+
+
+def _operand_names(rhs: str, opcode: str):
+    inner = rhs.split(opcode + "(", 1)[1]
+    # cut at matching close paren (operands never contain parens)
+    inner = inner.split(")", 1)[0]
+    return [t.strip().lstrip("%") for t in inner.split(",") if t.strip().startswith("%")]
+
+
+def analyze_hlo(hlo: str, num_partitions: int = 1) -> Cost:
+    comps, entry = _split_computations(hlo)
+
+    # symbol tables: per computation, instruction name -> type text
+    symtabs: dict[str, dict[str, str]] = {}
+    for name, lines in comps.items():
+        tab = {}
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            res_name, rhs = m.group(1), m.group(2)
+            om = _OPCODE_RE.match(rhs)
+            if om:
+                tab[res_name] = om.group(1)
+        symtabs[name] = tab
+
+    cache: dict[str, Cost] = {}
+
+    def comp_cost(name: str, top_level: bool) -> Cost:
+        key = f"{name}@{top_level}"
+        if key in cache:
+            return cache[key]
+        cache[key] = Cost()  # cycle guard
+        total = Cost()
+        tab = symtabs.get(name, {})
+        for line in comps.get(name, []):
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            rhs = m.group(2)
+            om = _OPCODE_RE.match(rhs)
+            if not om:
+                continue
+            result_type, opcode = om.group(1), om.group(2)
+            c = Cost()
+            if opcode == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", line)
+                trips = 1
+                mt = re.search(r'known_trip_count.{0,8}"n":"(\d+)"', line)
+                if mt:
+                    trips = int(mt.group(1))
+                else:
+                    mc = re.search(r"condition=%?([\w\.\-]+)", line)
+                    if mc:
+                        consts = [
+                            int(x)
+                            for l2 in comps.get(mc.group(1), [])
+                            for x in re.findall(r"constant\((\d+)\)", l2)
+                        ]
+                        trips = max(consts) if consts else 1
+                if mb:
+                    c += comp_cost(mb.group(1), top_level).scaled(trips)
+            elif opcode == "fusion":
+                mcall = re.search(r"calls=%?([\w\.\-]+)", line)
+                dus_update_bytes = None
+                if mcall:
+                    inner = comp_cost(mcall.group(1), False)
+                    c.flops += inner.flops
+                    c.dot_flops += inner.dot_flops
+                    c.collective_bytes += inner.collective_bytes
+                    dus_update_bytes = _dus_root_update_bytes(
+                        comps.get(mcall.group(1), [])
+                    )
+                if top_level:
+                    if dus_update_bytes is not None:
+                        # in-place dynamic-update-slice root: XLA aliases the
+                        # full buffer; actual HBM traffic is the updated
+                        # region (read-modify-write), not the whole operand.
+                        c.bytes += 2 * dus_update_bytes
+                    else:
+                        c.bytes += _bytes_of(result_type) + sum(
+                            _bytes_of(tab.get(o, ""))
+                            for o in _operand_names(rhs, opcode)
+                        )
+            elif opcode in ("call", "async-start", "async-done"):
+                mcall = re.search(r"(?:to_apply|called_computation)=%?([\w\.\-]+)", line)
+                if mcall:
+                    c += comp_cost(mcall.group(1), top_level)
+            elif opcode == "conditional":
+                branches = re.findall(r"branch_computations=\{([^}]*)\}", line)
+                names = []
+                if branches:
+                    names = [b.strip().lstrip("%") for b in branches[0].split(",")]
+                else:
+                    names = re.findall(r"(?:true|false)_computation=%?([\w\.\-]+)", line)
+                for b in names:
+                    c += comp_cost(b, top_level)
+            elif opcode == "dot":
+                ops = _operand_names(rhs, opcode)
+                result_elems = _elems_of(result_type)
+                contract = 1
+                mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                if mc and ops:
+                    lhs_shape = _parse_shapes(tab.get(ops[0], ""))
+                    if lhs_shape:
+                        dims = lhs_shape[0][1]
+                        for d in (int(x) for x in mc.group(1).split(",") if x):
+                            if d < len(dims):
+                                contract *= dims[d]
+                c.flops += 2.0 * result_elems * contract
+                c.dot_flops += 2.0 * result_elems * contract
+                if top_level:
+                    c.bytes += _bytes_of(result_type) + sum(
+                        _bytes_of(tab.get(o, "")) for o in ops
+                    )
+            elif opcode == "convolution":
+                ops = _operand_names(rhs, opcode)
+                result_elems = _elems_of(result_type)
+                per_out = 1.0
+                if len(ops) >= 2:
+                    rhs_shape = _parse_shapes(tab.get(ops[1], ""))
+                    mo = re.search(r"dim_labels=[\w?]+_(\w+)->", line)
+                    if rhs_shape:
+                        dims = rhs_shape[0][1]
+                        kelems = 1
+                        for d in dims:
+                            kelems *= d
+                        if mo:
+                            # output-feature position marked 'o' in labels
+                            labels = mo.group(1)
+                            opos = labels.index("o") if "o" in labels else 0
+                            per_out = kelems / max(dims[opos], 1)
+                        else:
+                            per_out = kelems / max(max(dims), 1)
+                c.flops += 2.0 * result_elems * per_out
+                c.dot_flops += 2.0 * result_elems * per_out
+                if top_level:
+                    c.bytes += _bytes_of(result_type) + sum(
+                        _bytes_of(tab.get(o, "")) for o in ops
+                    )
+            elif any(opcode.startswith(col) for col in _COLLECTIVES):
+                g = _group_size(line, num_partitions)
+                ops = _operand_names(rhs, opcode)
+                in_b = sum(_bytes_of(tab.get(o, "")) for o in ops) or _bytes_of(result_type)
+                out_b = _bytes_of(result_type)
+                factor = (g - 1) / g if g > 1 else 0.0
+                if opcode.startswith("all-reduce"):
+                    wire = 2.0 * in_b * factor
+                elif opcode.startswith("all-gather"):
+                    wire = out_b * factor
+                elif opcode.startswith("reduce-scatter"):
+                    wire = in_b * factor
+                elif opcode.startswith("all-to-all"):
+                    wire = in_b * factor
+                else:
+                    wire = in_b
+                c.collective_bytes += wire
+                c.collectives[opcode.split(".")[0].split("-start")[0]] += wire
+                if top_level:
+                    c.bytes += out_b + in_b
+            elif opcode in _NO_TRAFFIC:
+                pass
+            elif opcode == "dynamic-update-slice":
+                ops = _operand_names(rhs, opcode)
+                upd = _bytes_of(tab.get(ops[1], "")) if len(ops) > 1 else 0
+                if top_level:
+                    c.bytes += 2 * upd  # in-place read-modify-write
+            elif opcode == "dynamic-slice":
+                if top_level:
+                    c.bytes += 2 * _bytes_of(result_type)  # slice read + write
+            else:
+                c.flops += _elems_of(result_type)
+                if top_level:
+                    c.bytes += _bytes_of(result_type) + sum(
+                        _bytes_of(tab.get(o, "")) for o in _operand_names(rhs, opcode)
+                    )
+            total += c
+        cache[key] = total
+        return total
+
+    if entry is None:
+        entry = list(comps)[-1]
+    return comp_cost(entry, True)
+
+
+def _dus_root_update_bytes(comp_lines: list[str]) -> int | None:
+    """If a fusion computation's ROOT is dynamic-update-slice, return the
+    update-operand byte size (the true HBM write), else None."""
+    tab = {}
+    root = None
+    for line in comp_lines:
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        om = _OPCODE_RE.match(m.group(2))
+        if om:
+            tab[m.group(1)] = (om.group(1), om.group(2), m.group(2))
+        if line.startswith("ROOT"):
+            root = m.group(1)
+    if root is None or root not in tab:
+        return None
+    rtype, ropcode, rrhs = tab[root]
+    if ropcode != "dynamic-update-slice":
+        return None
+    ops = _operand_names(rrhs, ropcode)
+    if len(ops) > 1 and ops[1] in tab:
+        return _bytes_of(tab[ops[1]][0])
+    return None
+
+
+def _group_size(line: str, num_partitions: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return num_partitions

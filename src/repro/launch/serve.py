@@ -1,0 +1,77 @@
+"""Batched serving driver: prefill + greedy decode loop with KV cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
+      --batch 4 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_bundle
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_host_mesh
+
+
+def serve(arch: str, *, batch: int, prompt_len: int, gen: int, smoke: bool,
+          mesh=None, param_dtype=jnp.float32):
+    bundle = get_bundle(arch, smoke=smoke)
+    mesh = mesh or make_host_mesh()
+    max_len = prompt_len + gen
+
+    with jax.set_mesh(mesh):
+        params = bundle.init(jax.random.PRNGKey(0), param_dtype)
+        prompts = jax.random.randint(
+            jax.random.PRNGKey(1), (batch, prompt_len), 0, bundle.cfg.vocab
+        )
+        cache = bundle.make_cache(batch, max_len, param_dtype)
+        decode = jax.jit(bundle.decode_fn, donate_argnums=(1,))
+
+        # prefill by stepping the decoder over the prompt (cache warm-up);
+        # attention-free archs carry recurrent state the same way.
+        t0 = time.time()
+        tok = None
+        for t in range(prompt_len):
+            logits, cache = decode(
+                params, cache, {"tokens": prompts[:, t : t + 1], "pos": jnp.int32(t)}
+            )
+        prefill_s = time.time() - t0
+
+        out_tokens = []
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        t0 = time.time()
+        for t in range(prompt_len, max_len):
+            out_tokens.append(tok)
+            logits, cache = decode(params, cache, {"tokens": tok, "pos": jnp.int32(t)})
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        decode_s = time.time() - t0
+
+    seq = jnp.concatenate(out_tokens, axis=1)
+    tps = batch * gen / decode_s
+    print(
+        f"{arch}: prefill {prompt_len} toks in {prefill_s:.2f}s; "
+        f"generated {gen} x {batch} in {decode_s:.2f}s ({tps:.1f} tok/s)"
+    )
+    return seq
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    seq = serve(
+        args.arch, batch=args.batch, prompt_len=args.prompt_len,
+        gen=args.gen, smoke=args.smoke,
+    )
+    print("sample tokens:", seq[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Step-function builders: train / prefill / serve, with shardings.
+
+All builders return ``(fn, in_shardings, out_shardings, example_inputs)``
+ready for ``jax.jit(fn, in_shardings=..., out_shardings=...)`` — used both
+by the real launchers and by the dry-run (which lowers against
+ShapeDtypeStructs only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import schema_pspecs, schema_shapes
+from repro.optim import AdamWConfig, apply_updates, compress_tree, init_state
+from repro.optim.schedule import cosine_with_warmup
+from repro.sharding import resolve_pspec
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = AdamWConfig()
+    warmup: int = 100
+    total_steps: int = 10000
+    grad_compression: str | None = None  # None | "int8" | "topk"
+    # layer-level remat lives inside the models (scan bodies are
+    # jax.checkpoint'ed); this flag adds a whole-loss remat on top.
+    remat: bool = False
+    # gradient accumulation: saved activations scale with B/microbatches,
+    # the capacity lever for large-model train cells (§Perf).
+    microbatches: int = 1
+    # FSDP/ZeRO: shard params/grads/optimizer state over the data axes too.
+    fsdp: bool = True
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)
+
+
+def batch_pspecs(bundle, batch_shapes, mesh):
+    axes = bundle.batch_axes(batch_shapes)
+    return jax.tree.map(
+        lambda leaf, ax: resolve_pspec(leaf.shape, ax, dict(mesh.shape)),
+        batch_shapes,
+        axes,
+    )
+
+
+def cache_pspecs(bundle, cache_shapes, mesh):
+    axes = bundle.cache_axes(cache_shapes)
+    return jax.tree.map(
+        lambda leaf, ax: resolve_pspec(leaf.shape, ax, dict(mesh.shape)),
+        cache_shapes,
+        axes,
+    )
+
+
+def opt_state_pspecs(param_pspecs):
+    return {
+        "m": param_pspecs,
+        "v": param_pspecs,
+        "step": P(),
+    }
+
+
+def build_train_step(bundle, mesh, tcfg: TrainConfig = TrainConfig()):
+    """train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    Cross-pod gradient compression: when the mesh has a "pod" axis and
+    compression is enabled, gradients are (error-feedback) compressed before
+    the optimizer — modeling the deployed compress -> pod-reduce ->
+    decompress pipeline with reproducible numerics (DESIGN.md §5).
+    """
+    loss_fn = bundle.loss_fn
+    if tcfg.remat:
+        loss_fn = jax.checkpoint(loss_fn)
+
+    param_ps = schema_pspecs(bundle.schema, mesh, fsdp=tcfg.fsdp)
+    opt_ps = opt_state_pspecs(param_ps)
+
+    def _constrain_like_params(tree):
+        return jax.tree.map(
+            lambda a, ps: jax.lax.with_sharding_constraint(a, ps), tree, param_ps
+        )
+
+    def _grads(params, batch):
+        m = tcfg.microbatches
+        if m <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        mb = jax.tree.map(
+            lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:])
+            if getattr(x, "ndim", 0) >= 1 and x.shape[0] % m == 0
+            else jnp.broadcast_to(x, (m,) + getattr(x, "shape", ())),
+            batch,
+        )
+
+        def body(acc, mbatch):
+            loss, g = jax.value_and_grad(loss_fn)(params, mbatch)
+            acc = jax.tree.map(
+                lambda a, gg: a + gg.astype(a.dtype) / m, acc, g
+            )
+            return _constrain_like_params(acc), loss
+
+        acc0 = _constrain_like_params(
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        )
+        acc, losses = jax.lax.scan(body, acc0, mb)
+        return jnp.mean(losses), acc
+
+    def train_step(params, opt_state, batch):
+        loss, grads = _grads(params, batch)
+        if tcfg.grad_compression and "pod" in mesh.shape:
+            grads, _ = compress_tree(grads, None, tcfg.grad_compression)
+        lr_scale = cosine_with_warmup(
+            opt_state["step"], warmup=tcfg.warmup, total=tcfg.total_steps
+        )
+        params, opt_state, metrics = apply_updates(
+            params, grads, opt_state, tcfg.opt, lr_scale
+        )
+        return params, opt_state, {"loss": loss, **metrics}
+
+    return train_step, param_ps, opt_ps
+
+
+def build_prefill_step(bundle, mesh):
+    def prefill(params, batch):
+        return bundle.prefill_fn(params, batch)
+
+    return prefill, schema_pspecs(bundle.schema, mesh)
+
+
+def build_serve_step(bundle, mesh):
+    def serve(params, cache, batch):
+        logits, cache = bundle.decode_fn(params, cache, batch)
+        # greedy next token (serving loop feeds it back)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve, schema_pspecs(bundle.schema, mesh)
+
+
+def make_opt_shapes(bundle, dtype=jnp.bfloat16):
+    params = schema_shapes(bundle.schema, dtype)
+    return jax.eval_shape(init_state, params)

@@ -1,0 +1,132 @@
+"""The paper's CNN workloads: LeNet-5, AlexNet, VGG-16 ConvL stacks.
+
+Each network is a list of conv-layer geometries (the paper's experiments
+time only the ConvLs).  ``run_convls`` executes the stack either
+single-node ("naive") or with every ConvL dispatched through FCDCC — this
+drives benchmarks/exp1..exp5 and the coded-inference example.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fcdcc import CodedConv2d, FcdccPlan
+from repro.core.partition import ConvGeometry
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvL:
+    name: str
+    in_ch: int
+    out_ch: int
+    kernel: int
+    stride: int = 1
+    padding: int = 0
+    pool: int = 1  # max-pool factor applied after relu
+
+
+# (input spatial size, conv layer list) — classic configs
+LENET5 = (
+    32,
+    [
+        ConvL("conv1", 1, 6, 5),
+        ConvL("conv2", 6, 16, 5, pool=2),
+    ],
+)
+
+ALEXNET = (
+    227,
+    [
+        ConvL("conv1", 3, 96, 11, stride=4, pool=2),
+        ConvL("conv2", 96, 256, 5, padding=2, pool=2),
+        ConvL("conv3", 256, 384, 3, padding=1),
+        ConvL("conv4", 384, 384, 3, padding=1),
+        ConvL("conv5", 384, 256, 3, padding=1, pool=2),
+    ],
+)
+
+VGG16 = (
+    224,
+    [
+        ConvL("conv1_1", 3, 64, 3, padding=1),
+        ConvL("conv1_2", 64, 64, 3, padding=1, pool=2),
+        ConvL("conv2_1", 64, 128, 3, padding=1),
+        ConvL("conv2_2", 128, 128, 3, padding=1, pool=2),
+        ConvL("conv3_1", 128, 256, 3, padding=1),
+        ConvL("conv3_2", 256, 256, 3, padding=1),
+        ConvL("conv3_3", 256, 256, 3, padding=1, pool=2),
+        ConvL("conv4_1", 256, 512, 3, padding=1),
+        ConvL("conv4_2", 512, 512, 3, padding=1),
+        ConvL("conv4_3", 512, 512, 3, padding=1, pool=2),
+        ConvL("conv5_1", 512, 512, 3, padding=1),
+        ConvL("conv5_2", 512, 512, 3, padding=1),
+        ConvL("conv5_3", 512, 512, 3, padding=1, pool=2),
+    ],
+)
+
+CNN_SPECS = {"lenet5": LENET5, "alexnet": ALEXNET, "vgg16": VGG16}
+
+
+def layer_geometry(layer: ConvL, hw: int, k_a: int = 1, k_b: int = 1) -> ConvGeometry:
+    return ConvGeometry(
+        in_channels=layer.in_ch,
+        out_channels=layer.out_ch,
+        height=hw,
+        width=hw,
+        kernel_h=layer.kernel,
+        kernel_w=layer.kernel,
+        stride=layer.stride,
+        padding=layer.padding,
+        k_a=k_a,
+        k_b=k_b,
+    )
+
+
+def init_cnn(name: str, key, dtype=jnp.float32):
+    _, layers = CNN_SPECS[name]
+    keys = jax.random.split(key, len(layers))
+    return {
+        l.name: jax.random.normal(k, (l.out_ch, l.in_ch, l.kernel, l.kernel), dtype)
+        * (1.0 / (l.in_ch * l.kernel**2) ** 0.5)
+        for k, l in zip(keys, layers)
+    }
+
+
+def _pool(x, f):
+    if f == 1:
+        return x
+    c, h, w = x.shape
+    h2, w2 = h - h % f, w - w % f
+    return jnp.max(x[:, :h2, :w2].reshape(c, h2 // f, f, w2 // f, f), axis=(2, 4))
+
+
+def run_convls(name: str, params, x, *, plan: FcdccPlan | None = None,
+               per_layer_kab: dict | None = None, worker_ids=None, backend="lax"):
+    """Run the ConvL stack on one image (C,H,W).
+
+    ``plan=None`` -> single-node naive execution; otherwise every ConvL goes
+    through the FCDCC pipeline with (k_a, k_b) from ``per_layer_kab`` (falls
+    back to the plan's defaults).
+    """
+    _, layers = CNN_SPECS[name]
+    for layer in layers:
+        hw = x.shape[1]
+        if plan is None:
+            y = jax.lax.conv_general_dilated(
+                x[None], params[layer.name],
+                window_strides=(layer.stride, layer.stride),
+                padding=((layer.padding, layer.padding),) * 2,
+                dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            )[0]
+        else:
+            k_a, k_b = (per_layer_kab or {}).get(
+                layer.name, (plan.k_a, plan.k_b)
+            )
+            lplan = FcdccPlan(n=plan.n, k_a=k_a, k_b=k_b)
+            geo = layer_geometry(layer, hw, k_a, k_b)
+            coded = CodedConv2d(lplan, geo, backend=backend)
+            y = coded.run_simulated(x, params[layer.name], worker_ids)
+        x = _pool(jax.nn.relu(y), layer.pool)
+    return x

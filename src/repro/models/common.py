@@ -1,0 +1,184 @@
+"""Shared model building blocks: param schema with logical sharding axes,
+norms, RoPE, attention (GQA / MLA, sliding-window, softcap, qk-norm).
+
+Params are plain nested dicts of arrays.  Each model defines a *schema*
+(same tree of ``ParamSpec``), from which we derive both ``init`` (random
+arrays) and ``shardings`` (PartitionSpecs under a mesh, with
+divisibility-aware fallback to replication).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# Logical-axis -> mesh-axis rules.  "data_axes" covers batch/sequence
+# activations; params only ever shard over the model axis.
+MODEL_AXIS = "model"
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis names, len == len(shape)
+    scale: float | None = None  # init stddev; default fan-in
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+# logical axes that shard over the model/tensor axis of the mesh
+_MODEL_SHARDED = {"vocab", "heads", "kv_heads", "ff", "experts", "out_ch"}
+
+
+def spec_to_pspec(spec: ParamSpec, mesh, fsdp: bool = False) -> P:
+    """Translate logical axes to a PartitionSpec, replicating any dim that
+    does not divide the mesh axis (e.g. smollm's 9 heads on model=16).
+
+    ``fsdp=True`` (training): additionally shard the largest remaining dim
+    over the data(+pod) axes — fully-sharded params/grads/optimizer state
+    (ZeRO-3-style); GSPMD inserts the per-layer weight all-gathers and
+    gradient reduce-scatters.
+    """
+    model_size = mesh.shape[MODEL_AXIS]
+    out: list = []
+    used_model = False
+    for dim, ax in zip(spec.shape, spec.axes):
+        if ax in _MODEL_SHARDED and not used_model and dim % model_size == 0:
+            out.append(MODEL_AXIS)
+            used_model = True
+        else:
+            out.append(None)
+    # FSDP only for stacked (>=3-D) layer weights: sharding a 2-D embedding
+    # over data conflicts with the batch sharding of the logits matmul and
+    # makes GSPMD replicate the whole table (measured: paligemma train_4k
+    # regressed 3.7x in flops / 8x in temp — see EXPERIMENTS.md §Perf).
+    if fsdp and len(spec.shape) >= 3:
+        data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        dsize = 1
+        for a in data_axes:
+            dsize *= mesh.shape[a]
+        # pick the largest not-yet-sharded dim divisible by the data degree
+        cands = [
+            (dim, i) for i, (dim, sp) in enumerate(zip(spec.shape, out))
+            if sp is None and dim % dsize == 0 and dim >= dsize
+        ]
+        if cands:
+            _, i = max(cands)
+            out[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+    return P(*out)
+
+
+def schema_init(schema, key, dtype=jnp.bfloat16):
+    """Random init of a schema tree (fan-in scaled normal)."""
+    leaves, treedef = jax.tree.flatten(
+        schema, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    arrs = []
+    for k, spec in zip(keys, leaves):
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        scale = spec.scale if spec.scale is not None else 1.0 / math.sqrt(fan_in)
+        if spec.scale == 0.0:
+            arrs.append(jnp.zeros(spec.shape, dtype))
+        else:
+            arrs.append(jax.random.normal(k, spec.shape, dtype) * scale)
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def schema_shapes(schema, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree (for eval_shape / dry-run)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        schema,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def schema_pspecs(schema, mesh, fsdp: bool = False):
+    return jax.tree.map(
+        lambda s: spec_to_pspec(s, mesh, fsdp),
+        schema,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def schema_shardings(schema, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, spec_to_pspec(s, mesh)),
+        schema,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def count_params(schema) -> int:
+    leaves = jax.tree.leaves(schema, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, gamma, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x, cap):
+    return cap * jnp.tanh(x / cap)
+
+
+def rope_inv_freq(head_dim: int, base: float = 10000.0):
+    half = head_dim // 2
+    return 1.0 / (base ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, inv_freq, positions):
+    """x: (B, S, H, D); positions: (B, S) int32.  Angles computed on the
+    fly (no O(max_pos) tables — matters at 500k context)."""
+    ang = positions.astype(jnp.float32)[:, :, None] * inv_freq  # (B,S,D/2)
+    c = jnp.cos(ang)[:, :, None, :]
+    s = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def make_attn_mask(q_pos, k_pos, window: int | None = None):
+    """Causal (+ optional sliding window) additive mask.
+
+    q_pos: (B, Sq), k_pos: (B, Sk) -> (B, 1, Sq, Sk) float32 {0, -inf}.
+    """
+    ok = k_pos[:, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        ok &= k_pos[:, None, :] > q_pos[:, :, None] - window
+    return jnp.where(ok, 0.0, -1e30)[:, None, :, :]
+
+
+def attention(q, k, v, mask, *, scale=None, attn_softcap=None):
+    """q: (B,Sq,H,D), k/v: (B,Sk,Hkv,D[v]); GQA by head repetition.
+
+    Softmax in fp32 (production numerics); returns (B,Sq,H,Dv).
+    """
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    rep = h // hkv
+    qg = q.reshape(b, sq, hkv, rep, d)
+    logits = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k).astype(jnp.float32) * scale
+    if attn_softcap is not None:
+        logits = softcap(logits, attn_softcap)
+    logits = logits + mask[:, :, None, :, :]  # mask (B,1,Sq,Sk) -> (B,1,1,Sq,Sk)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", probs, v)
+    return out.reshape(b, sq, h, v.shape[-1])

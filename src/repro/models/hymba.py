@@ -1,0 +1,274 @@
+"""Hymba-style hybrid: parallel attention + SSM heads inside every layer.
+
+Each layer splits the (normed) input into an attention branch (GQA, RoPE,
+sliding-window) and a Mamba-style selective-SSM branch (depthwise causal
+conv, data-dependent dt/B/C, per-head scalar decay — the Mamba-2
+simplification, noted in DESIGN.md), then fuses the two normed branch
+outputs by averaging (the paper's mean fusion).  Meta-tokens are omitted.
+
+Sub-quadratic: attention is windowed, SSM is O(T) — this arch runs the
+``long_500k`` shape with an O(window + state) cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import BATCH, shard_hint
+
+from .common import ParamSpec, apply_rope, attention, make_attn_mask, rms_norm, rope_inv_freq
+from .linear_scan import chunked_linear_attention, linear_step
+from .transformer import _flash_attention, _ring_write
+
+
+@dataclasses.dataclass(frozen=True)
+class HymbaConfig:
+    name: str
+    layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    ssm_state: int = 16
+    ssm_expand: int = 2
+    conv_width: int = 4
+    window: int = 1024
+    rope_base: float = 10000.0
+    chunk: int = 64
+    flash_chunk: int = 1024
+
+    @property
+    def d_inner(self):
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self):
+        return self.d_inner // self.head_dim
+
+
+def _layer_schema(cfg: HymbaConfig) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    di, ns, hm = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    return {
+        "ln": ParamSpec((d,), ("embed",), scale=0.0),
+        # attention branch
+        "wq": ParamSpec((d, h * hd), ("embed", "heads")),
+        "wk": ParamSpec((d, hkv * hd), ("embed", "kv_heads")),
+        "wv": ParamSpec((d, hkv * hd), ("embed", "kv_heads")),
+        "wo_attn": ParamSpec((h * hd, d), ("heads", "embed")),
+        "ln_attn_out": ParamSpec((d,), ("embed",), scale=0.0),
+        # ssm branch
+        "w_in": ParamSpec((d, 2 * di), ("embed", "ff")),  # u and gate z
+        "conv": ParamSpec((cfg.conv_width, di), (None, "ff"), scale=0.02),
+        "w_bc": ParamSpec((di, 2 * ns), ("ff", None)),
+        "w_dt": ParamSpec((di, hm), ("ff", "heads")),
+        "a_log": ParamSpec((hm,), ("heads",), scale=0.02),
+        "d_skip": ParamSpec((hm,), ("heads",), scale=0.02),
+        "wo_ssm": ParamSpec((di, d), ("ff", "embed")),
+        "ln_ssm_out": ParamSpec((d,), ("embed",), scale=0.0),
+        # ffn
+        "ln_ffn": ParamSpec((d,), ("embed",), scale=0.0),
+        "w_gate": ParamSpec((d, cfg.d_ff), ("embed", "ff")),
+        "w_up": ParamSpec((d, cfg.d_ff), ("embed", "ff")),
+        "w_down": ParamSpec((cfg.d_ff, d), ("ff", "embed")),
+    }
+
+
+def hymba_schema(cfg: HymbaConfig) -> dict:
+    stacked = jax.tree.map(
+        lambda p: ParamSpec((cfg.layers,) + p.shape, (None,) + p.axes, p.scale),
+        _layer_schema(cfg),
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+    return {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"), scale=0.02),
+        "ln_f": ParamSpec((cfg.d_model,), ("embed",), scale=0.0),
+        "layers": stacked,
+    }
+
+
+def _attn_branch(w, x, cfg, rope, q_pos, k_pos, cache):
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = apply_rope((x @ w["wq"]).reshape(b, s, h, hd), rope, q_pos)
+    k = apply_rope((x @ w["wk"]).reshape(b, s, hkv, hd), rope, q_pos)
+    v = (x @ w["wv"]).reshape(b, s, hkv, hd)
+    if cache is not None:
+        pos = q_pos[0, 0]
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1)
+        cache = {"k": k, "v": v}
+    scale = 1.0 / math.sqrt(hd)
+    if s > cfg.flash_chunk and s % cfg.flash_chunk == 0:
+        out = _flash_attention(
+            q, k, v, q_pos, k_pos, scale=scale, window=cfg.window,
+            attn_softcap=None, chunk=cfg.flash_chunk,
+        )
+    else:
+        mask = make_attn_mask(q_pos, k_pos, cfg.window)
+        out = attention(q, k, v, mask, scale=scale)
+    return out.reshape(b, s, h * hd) @ w["wo_attn"], cache
+
+
+def _causal_conv(u, kernel, tail):
+    """Depthwise causal conv. u: (B,T,di); kernel: (W,di); tail: (B,W-1,di)."""
+    w = kernel.shape[0]
+    up = jnp.concatenate([tail.astype(u.dtype), u], axis=1)
+    out = sum(up[:, i : i + u.shape[1]] * kernel[i] for i in range(w))
+    return out, up[:, -(w - 1) :]
+
+
+def _ssm_branch(w, x, cfg: HymbaConfig, state, decode: bool):
+    b, t, _ = x.shape
+    di, ns, hm, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.head_dim
+    uz = x @ w["w_in"]
+    u, z = jnp.split(uz, 2, axis=-1)
+    u, conv_tail = _causal_conv(u, w["conv"], state["conv"])
+    u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
+    bc = u @ w["w_bc"]
+    b_in, c_out = jnp.split(bc, 2, axis=-1)  # (B,T,ns) each
+    dt = jax.nn.softplus((u @ w["w_dt"]).astype(jnp.float32))  # (B,T,hm)
+    a = -jnp.exp(w["a_log"].astype(jnp.float32))  # (hm,) < 0
+    log_decay = dt * a  # (B,T,hm)
+
+    # map to linear attention: k = B (dk=ns), v = dt*u per head (dv=hd), r = C
+    kh = jnp.broadcast_to(b_in[:, :, None, :], (b, t, hm, ns))
+    rh = jnp.broadcast_to(c_out[:, :, None, :], (b, t, hm, ns))
+    vh = (u * dt.repeat(hd, axis=-1).astype(u.dtype)).reshape(b, t, hm, hd)
+    lw = jnp.broadcast_to(log_decay[..., None], (b, t, hm, ns))
+    if decode:
+        y, s = linear_step(rh[:, 0], kh[:, 0], vh[:, 0], lw[:, 0], state["s"])
+        y = y[:, None]
+    else:
+        y, s = chunked_linear_attention(rh, kh, vh, lw, chunk=cfg.chunk, state=state["s"])
+    y = y.reshape(b, t, di) + u * w["d_skip"].repeat(hd).astype(u.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    return y @ w["wo_ssm"], {"conv": conv_tail, "s": s}
+
+
+def _layer(w, x, cfg, rope, q_pos, k_pos, st, decode):
+    h_in = rms_norm(x, w["ln"])
+    attn_out, kv = _attn_branch(
+        w, h_in, cfg, rope, q_pos, k_pos, st["kv"] if decode else None
+    )
+    ssm_out, ssm_st = _ssm_branch(w, h_in, cfg, st, decode)
+    fused = 0.5 * (
+        rms_norm(attn_out, w["ln_attn_out"]) + rms_norm(ssm_out, w["ln_ssm_out"])
+    )
+    x = x + fused
+    h2 = rms_norm(x, w["ln_ffn"])
+    g = h2 @ w["w_gate"]
+    up = h2 @ w["w_up"]
+    ffn = (jax.nn.silu(g.astype(jnp.float32)).astype(up.dtype) * up) @ w["w_down"]
+    new_st = {"conv": ssm_st["conv"], "s": ssm_st["s"], "kv": kv}
+    return x + ffn, new_st
+
+
+def init_state(cfg: HymbaConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Decode cache: windowed KV + O(1) SSM state.  For long-context decode
+    the KV cache only needs ``window`` slots, but we allocate ``max_len``
+    capped at window for generality."""
+    kv_len = min(max_len, cfg.window)
+    return {
+        "kv": {
+            "k": jnp.zeros((cfg.layers, batch, kv_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((cfg.layers, batch, kv_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        },
+        "conv": jnp.zeros((cfg.layers, batch, cfg.conv_width - 1, cfg.d_inner), dtype),
+        "s": jnp.zeros(
+            (cfg.layers, batch, cfg.ssm_heads, cfg.ssm_state, cfg.head_dim),
+            jnp.float32,
+        ),
+    }
+
+
+def _prefill_state(cfg: HymbaConfig, batch: int):
+    return {
+        "conv": jnp.zeros((cfg.layers, batch, cfg.conv_width - 1, cfg.d_model * cfg.ssm_expand), jnp.bfloat16),
+        "s": jnp.zeros(
+            (cfg.layers, batch, cfg.ssm_heads, cfg.ssm_state, cfg.head_dim), jnp.float32
+        ),
+        "kv": None,
+    }
+
+
+def forward(params, cfg: HymbaConfig, tokens):
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    x = shard_hint(x, BATCH, "data" if b == 1 else None, None)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    rope = rope_inv_freq(cfg.head_dim, cfg.rope_base)
+    st = _prefill_state(cfg, b)
+
+    def body(x, xs):
+        w, stl = xs
+        x, _ = _layer(w, x, cfg, rope, pos, pos, stl, decode=False)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, (params["layers"], st))
+    x = rms_norm(x, params["ln_f"])
+    return (x @ params["embed"].T).astype(jnp.float32)
+
+
+def decode_step(params, cfg: HymbaConfig, state, tokens, pos):
+    """pos: absolute position; KV cache slot = pos % window (ring buffer)."""
+    b = tokens.shape[0]
+    x = params["embed"][tokens]
+    kv_len = state["kv"]["k"].shape[2]
+    slot = jnp.mod(pos.astype(jnp.int32), kv_len)
+    q_pos = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
+    # ring buffer: key positions reconstructed relative to current pos
+    idx = jnp.arange(kv_len, dtype=jnp.int32)
+    k_pos = jnp.where(
+        idx <= slot, pos - (slot - idx), pos - (slot + kv_len - idx)
+    )
+    k_pos = jnp.broadcast_to(k_pos[None], (b, kv_len))
+    rope = rope_inv_freq(cfg.head_dim, cfg.rope_base)
+
+    def body(x, xs):
+        w, stl = xs
+        stq = {"kv": stl["kv"], "conv": stl["conv"], "s": stl["s"]}
+        # write into ring slot
+        stq = dict(stq)
+        x, new_st = _layer_decode_ring(w, x, cfg, rope, q_pos, k_pos, stq, slot)
+        return x, new_st
+
+    x, new_state = jax.lax.scan(body, x, (params["layers"], state))
+    x = rms_norm(x, params["ln_f"])
+    return (x @ params["embed"].T).astype(jnp.float32), new_state
+
+
+def _layer_decode_ring(w, x, cfg, rope, q_pos, k_pos, st, slot):
+    h_in = rms_norm(x, w["ln"])
+    b, s, _ = h_in.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = apply_rope((h_in @ w["wq"]).reshape(b, s, h, hd), rope, q_pos)
+    k = apply_rope((h_in @ w["wk"]).reshape(b, s, hkv, hd), rope, q_pos)
+    v = (h_in @ w["wv"]).reshape(b, s, hkv, hd)
+    ck = _ring_write(st["kv"]["k"], k, slot)
+    cv = _ring_write(st["kv"]["v"], v, slot)
+    mask = make_attn_mask(q_pos, k_pos, cfg.window)
+    attn_out = attention(q, ck, cv, mask, scale=1.0 / math.sqrt(hd))
+    attn_out = attn_out.reshape(b, s, h * hd) @ w["wo_attn"]
+    ssm_out, ssm_st = _ssm_branch(w, h_in, cfg, st, decode=True)
+    fused = 0.5 * (
+        rms_norm(attn_out, w["ln_attn_out"]) + rms_norm(ssm_out, w["ln_ssm_out"])
+    )
+    x = x + fused
+    h2 = rms_norm(x, w["ln_ffn"])
+    g = h2 @ w["w_gate"]
+    up = h2 @ w["w_up"]
+    ffn = (jax.nn.silu(g.astype(jnp.float32)).astype(up.dtype) * up) @ w["w_down"]
+    return x + ffn, {"kv": {"k": ck, "v": cv}, "conv": ssm_st["conv"], "s": ssm_st["s"]}
+
+
+def lm_loss(params, cfg: HymbaConfig, tokens, targets):
+    logits = forward(params, cfg, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)

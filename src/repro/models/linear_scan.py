@@ -1,0 +1,106 @@
+"""Chunked linear-attention / selective-SSM scan.
+
+Canonical recurrence (per head, state S in R^{dk x dv}):
+
+    S_t = S_{t-1} * w_t   + k_t (x) v_t          (w_t: per-channel decay)
+    y_t = r_t . S_t                              (inclusive, Mamba2-style)
+or, in RWKV mode:
+    y_t = r_t . (S_{t-1} + (u * k_t) (x) v_t)    (bonus u on current token)
+    S_t = S_{t-1} * w_t + k_t (x) v_t
+
+Chunked evaluation: within a chunk of length C the contributions factor
+through cumulative log-decays ``lp`` — intra-chunk pairs use
+``exp(lp_t - lp_tau) <= 1`` (safe; decay <= 1) and the carried state uses
+``exp(lp_last - lp_tau)``.  Cross-chunk state is carried by ``lax.scan``,
+so activation memory is O(T * C) instead of O(T^2) and the HLO stays
+compact.  This is the TPU-native adaptation of recurrent-layer papers:
+MXU-sized GEMMs inside the chunk, a tiny sequential carry across chunks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_linear_attention", "linear_step"]
+
+
+def chunked_linear_attention(
+    r, k, v, log_decay, *, bonus_u=None, chunk: int = 64, state=None
+):
+    """r/k: (B,T,H,dk); v: (B,T,H,dv); log_decay: (B,T,H,dk) (log w_t <= 0).
+
+    ``bonus_u``: (H, dk) enables RWKV mode.  ``state``: (B,H,dk,dv) carry.
+    Returns (y, final_state): y (B,T,H,dv).
+    """
+    b, t, h, dk = r.shape
+    dv = v.shape[-1]
+    c = min(chunk, t)
+    t0 = t
+    if t % c:  # pad tail: k=0 -> no state update; log_decay=0 -> no decay
+        pad = c - t % c
+        r, k, v = (jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * 2) for a in (r, k, v))
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        t = t + pad
+    n = t // c
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def reshape_c(x):
+        return x.reshape(b, n, c, *x.shape[2:]).swapaxes(0, 1)  # (n,B,c,...)
+
+    rc, kc, vc, lpc = map(reshape_c, (r, k, v, log_decay))
+
+    tri_inc = jnp.tril(jnp.ones((c, c), bool))  # tau <= t
+    tri_exc = jnp.tril(jnp.ones((c, c), bool), k=-1)  # tau < t
+    mask = tri_exc if bonus_u is not None else tri_inc
+
+    @jax.checkpoint
+    def chunk_step(s, xs):
+        rb, kb, vb, lpb = xs  # (B,c,H,dk)x3, (B,c,H,dv) for vb
+        lp = jnp.cumsum(lpb.astype(jnp.float32), axis=1)  # (B,c,H,dk)
+        # inter-chunk: query sees carried state through decay exp(lp) -- in
+        # RWKV mode the query at t sees S_{t-1}: decay up to t-1 => shift.
+        lp_q = lp
+        if bonus_u is not None:
+            lp_q = jnp.pad(lp, ((0, 0), (1, 0), (0, 0), (0, 0)))[:, :-1]
+        q_dec = rb.astype(jnp.float32) * jnp.exp(lp_q)
+        y_inter = jnp.einsum("bthk,bhkv->bthv", q_dec, s)
+        # intra-chunk: pairwise decays exp(lp_q[t] - lp[tau]) <= 1
+        diff = lp_q[:, :, None] - lp[:, None, :]  # (B,c,c,H,dk)
+        a = jnp.einsum(
+            "bthk,bshk,btshk->bths",
+            rb.astype(jnp.float32),
+            kb.astype(jnp.float32),
+            jnp.exp(jnp.where(mask[None, :, :, None, None], diff, -jnp.inf)),
+        )
+        y_intra = jnp.einsum("bths,bshv->bthv", a, vb.astype(jnp.float32))
+        if bonus_u is not None:
+            diag = jnp.einsum(
+                "bthk,hk,bthk->bth", rb.astype(jnp.float32), bonus_u, kb.astype(jnp.float32)
+            )
+            y_intra = y_intra + diag[..., None] * vb.astype(jnp.float32)
+        # state update: S' = S * P_last + sum_tau exp(lp_last - lp_tau) k v
+        p_last = lp[:, -1][:, None]  # (B,1,H,dk)
+        k_dec = kb.astype(jnp.float32) * jnp.exp(p_last - lp)
+        s_new = s * jnp.exp(lp[:, -1])[..., None] + jnp.einsum(
+            "bthk,bthv->bhkv", k_dec, vb.astype(jnp.float32)
+        )
+        return s_new, (y_inter + y_intra).astype(r.dtype)
+
+    state, ys = jax.lax.scan(chunk_step, state, (rc, kc, vc, lpc))
+    y = ys.swapaxes(0, 1).reshape(b, t, h, dv)[:, :t0]
+    return y, state
+
+
+def linear_step(r, k, v, log_decay, state, *, bonus_u=None):
+    """Single decode step.  r/k: (B,H,dk); v: (B,H,dv); state (B,H,dk,dv)."""
+    w = jnp.exp(log_decay.astype(jnp.float32))[..., None]  # (B,H,dk,1)
+    kv = jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32))
+    if bonus_u is not None:
+        att = state + bonus_u[None, :, :, None] * kv
+        y = jnp.einsum("bhk,bhkv->bhv", r.astype(jnp.float32), att)
+        state = state * w + kv
+    else:
+        state = state * w + kv
+        y = jnp.einsum("bhk,bhkv->bhv", r.astype(jnp.float32), state)
+    return y.astype(r.dtype), state

@@ -1,0 +1,199 @@
+"""Uniform ModelBundle interface over all architecture families.
+
+A bundle exposes everything the launcher / dry-run / tests need:
+schema, loss (train), prefill, decode step, cache construction, and the
+logical sharding axes of batch + cache leaves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import BATCH
+
+from . import hymba as hymba_mod
+from . import rwkv6 as rwkv_mod
+from . import transformer as lm
+from . import whisper as whisper_mod
+from .common import schema_init, schema_shapes
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    name: str
+    family: str  # "lm" | "vlm" | "encdec" | "ssm" | "hybrid"
+    cfg: Any
+    schema: dict
+    sub_quadratic: bool
+    has_decoder: bool
+    loss_fn: Callable  # (params, batch) -> scalar
+    prefill_fn: Callable  # (params, batch) -> logits
+    decode_fn: Callable  # (params, cache, batch) -> (logits, cache)
+    make_cache: Callable  # (batch, max_len) -> cache pytree
+    cache_axes: Callable  # (cache_leaf_path_free) -> same-tree of axes tuples
+    batch_axes: Callable  # (batch dict) -> same-tree of axes tuples
+
+    def init(self, key, dtype=jnp.bfloat16):
+        return schema_init(self.schema, key, dtype)
+
+    def param_shapes(self, dtype=jnp.bfloat16):
+        return schema_shapes(self.schema, dtype)
+
+
+def _token_batch_axes(batch):
+    """tokens/labels: batch over (pod,data); seq replicated (or data for B=1)."""
+    out = {}
+    for k, v in batch.items():
+        if v.ndim == 0:
+            out[k] = ()
+        elif v.ndim >= 2 and v.shape[0] == 1:
+            out[k] = (None, "data") + (None,) * (v.ndim - 2)
+        else:
+            out[k] = (BATCH,) + (None,) * (v.ndim - 1)
+    return out
+
+
+def _kv_cache_axes(tree):
+    """(L, B, S, H, hd)-style leaves: B->batch axes, seq->model.
+
+    §Perf: sequence-axis sharding + ring-writes make decode cache updates
+    collective-free.  REPRO_BASELINE=1 restores the naive head/hd-axis
+    sharding whose dynamic-update-slice forces a full cache all-gather.
+    """
+    import os
+
+    baseline = os.environ.get("REPRO_BASELINE") == "1"
+
+    def one(x):
+        if x.ndim == 5:  # (L,B,S,H,hd)
+            kv_divides = x.shape[3] % 16 == 0  # production model degree
+            if baseline or kv_divides:
+                # head-sharded cache + DUS (cheapest when kv heads shard)
+                return (None, BATCH if x.shape[1] > 1 else None,
+                        "data" if x.shape[1] == 1 else None, "model", "model")
+            return (None, BATCH if x.shape[1] > 1 else None,
+                    ("data", "model") if x.shape[1] == 1 else "model",
+                    None, None)
+        if x.ndim == 4:  # (L,B,S,dim) e.g. MLA latent
+            if baseline:
+                return (None, BATCH if x.shape[1] > 1 else None,
+                        "data" if x.shape[1] == 1 else None, "model")
+            return (None, BATCH if x.shape[1] > 1 else None,
+                    ("data", "model") if x.shape[1] == 1 else "model", None)
+        if x.ndim == 3:  # (L,B,d)
+            return (None, BATCH if x.shape[1] > 1 else None, "model")
+        return (None,) * x.ndim
+
+    return jax.tree.map(one, tree)
+
+
+def make_lm_bundle(cfg: lm.LMConfig, family="lm", prefix: tuple[int, int] | None = None):
+    """prefix: (length, dim) of stub frontend embeddings (PaliGemma)."""
+
+    def loss_fn(params, batch):
+        return lm.lm_loss(
+            params, cfg, batch["tokens"], batch["labels"], batch.get("prefix")
+        )
+
+    def prefill_fn(params, batch):
+        return lm.forward(params, cfg, batch["tokens"], batch.get("prefix"))
+
+    def decode_fn(params, cache, batch):
+        return lm.decode_step(params, cfg, cache, batch["tokens"], batch["pos"])
+
+    return ModelBundle(
+        name=cfg.name,
+        family=family,
+        cfg=cfg,
+        schema=lm.lm_schema(cfg),
+        sub_quadratic=cfg.sub_quadratic,
+        has_decoder=True,
+        loss_fn=loss_fn,
+        prefill_fn=prefill_fn,
+        decode_fn=decode_fn,
+        make_cache=lambda b, s, dtype=jnp.bfloat16: lm.init_cache(cfg, b, s, dtype),
+        cache_axes=_kv_cache_axes,
+        batch_axes=_token_batch_axes,
+    )
+
+
+def make_rwkv_bundle(cfg: rwkv_mod.RwkvConfig):
+    return ModelBundle(
+        name=cfg.name,
+        family="ssm",
+        cfg=cfg,
+        schema=rwkv_mod.rwkv_schema(cfg),
+        sub_quadratic=True,
+        has_decoder=True,
+        loss_fn=lambda p, b: rwkv_mod.lm_loss(p, cfg, b["tokens"], b["labels"]),
+        prefill_fn=lambda p, b: rwkv_mod.forward(p, cfg, b["tokens"]),
+        decode_fn=lambda p, c, b: rwkv_mod.decode_step(p, cfg, c, b["tokens"], b["pos"]),
+        make_cache=lambda b, s, dtype=jnp.bfloat16: rwkv_mod.init_state(cfg, b, dtype),
+        cache_axes=lambda tree: jax.tree.map(
+            lambda x: (None, BATCH if x.shape[1] > 1 else None, "model")
+            + (None,) * (x.ndim - 3),
+            tree,
+        ),
+        batch_axes=_token_batch_axes,
+    )
+
+
+def make_hymba_bundle(cfg: hymba_mod.HymbaConfig):
+    def cache_axes(tree):
+        def one(x):
+            if x.ndim == 5 and x.shape[-1] == cfg.head_dim and x.shape[-2] != cfg.ssm_state:
+                return (None, BATCH if x.shape[1] > 1 else None, None, "model", "model")
+            if x.ndim == 5:  # ssm state (L,B,Hm,ns,hd)
+                return (None, BATCH if x.shape[1] > 1 else None, "model", None, "model")
+            return (None,) * x.ndim
+
+        return jax.tree.map(one, tree)
+
+    return ModelBundle(
+        name=cfg.name,
+        family="hybrid",
+        cfg=cfg,
+        schema=hymba_mod.hymba_schema(cfg),
+        sub_quadratic=True,
+        has_decoder=True,
+        loss_fn=lambda p, b: hymba_mod.lm_loss(p, cfg, b["tokens"], b["labels"]),
+        prefill_fn=lambda p, b: hymba_mod.forward(p, cfg, b["tokens"]),
+        decode_fn=lambda p, c, b: hymba_mod.decode_step(p, cfg, c, b["tokens"], b["pos"]),
+        make_cache=lambda b, s, dtype=jnp.bfloat16: hymba_mod.init_state(cfg, b, s, dtype),
+        cache_axes=cache_axes,
+        batch_axes=_token_batch_axes,
+    )
+
+
+def make_whisper_bundle(cfg: whisper_mod.WhisperConfig):
+    def loss_fn(params, batch):
+        return whisper_mod.lm_loss(
+            params, cfg, batch["frames"], batch["tokens"], batch["labels"]
+        )
+
+    def prefill_fn(params, batch):
+        return whisper_mod.forward(params, cfg, batch["frames"], batch["tokens"])
+
+    def decode_fn(params, cache, batch):
+        return whisper_mod.decode_step(params, cfg, cache, batch["tokens"], batch["pos"])
+
+    return ModelBundle(
+        name=cfg.name,
+        family="encdec",
+        cfg=cfg,
+        schema=whisper_mod.whisper_schema(cfg),
+        sub_quadratic=False,
+        has_decoder=True,
+        loss_fn=loss_fn,
+        prefill_fn=prefill_fn,
+        decode_fn=decode_fn,
+        make_cache=lambda b, s, dtype=jnp.bfloat16: whisper_mod.init_cache(cfg, b, s, dtype),
+        cache_axes=lambda tree: jax.tree.map(
+            lambda x: (None, BATCH if x.shape[1] > 1 else None, "model", None, None),
+            tree,
+        ),
+        batch_axes=_token_batch_axes,
+    )

@@ -1,0 +1,614 @@
+"""Generic decoder-only LM covering the dense/GQA/MLA/MoE design space:
+
+  * GQA attention (n_kv_heads <= n_heads), optional per-head qk-norm (Qwen3)
+  * MLA latent attention with compressed KV cache (DeepSeek-V2/V3)
+  * MoE FFN (shared + routed, top-k, sort-based dispatch) with dense-first
+    layers (DeepSeek), or plain SwiGLU/GeGLU FFN
+  * attention/logit softcaps + sandwich norms + embedding scaling (Gemma2)
+  * sliding-window attention, optionally alternating local/global layers
+  * optional prefix embeddings (PaliGemma image patches, Whisper-style stubs)
+
+Layers run under ``jax.lax.scan`` with stacked params (compact HLO, fast
+compile — the production pattern).  Long sequences use a flash-style
+two-level scan attention (online softmax over KV chunks) so activation
+memory stays O(S * chunk) instead of O(S^2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import BATCH, shard_hint
+
+from .common import (
+    ParamSpec,
+    apply_rope,
+    attention,
+    make_attn_mask,
+    rms_norm,
+    rope_inv_freq,
+    softcap,
+)
+from .moe import MoEConfig, moe_ffn, moe_schema
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora: int  # 0 => direct q projection
+    kv_lora: int
+    qk_nope_dim: int
+    qk_rope_dim: int
+    v_dim: int
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    act: str = "silu"  # "silu" | "gelu"
+    attn: str = "gqa"  # "gqa" | "mla"
+    mla: Optional[MLAConfig] = None
+    moe: Optional[MoEConfig] = None
+    n_dense_layers: int = 0  # leading dense layers before MoE stack
+    qk_norm: bool = False
+    attn_softcap: Optional[float] = None
+    logit_softcap: Optional[float] = None
+    window: Optional[int] = None
+    window_pattern: str = "none"  # "none" | "all" | "alternate"
+    rope_base: float = 10000.0
+    tie_embeddings: bool = True
+    embed_scale: bool = False  # gemma: x *= sqrt(d_model)
+    sandwich_norms: bool = False  # gemma2 post-attn/post-ffn norms
+    max_seq: int = 4096
+    flash_chunk: int = 1024
+    # §Perf hillclimb: iterate only the lower-triangle (q,kv) block pairs —
+    # skips the fully-masked upper half, halving attention FLOPs and HBM
+    # traffic for causal prefill/train.  False = paper-faithful baseline
+    # (full rectangle, mask applied).
+    flash_block_skip: bool = dataclasses.field(
+        default_factory=lambda: os.environ.get("REPRO_BASELINE") != "1"
+    )
+    sub_quadratic: bool = False  # True only for SSM/hybrid families
+
+    @property
+    def q_dim(self):
+        if self.attn == "mla":
+            return self.mla.qk_nope_dim + self.mla.qk_rope_dim
+        return self.head_dim
+
+
+# ---------------------------------------------------------------------------
+# schema
+# ---------------------------------------------------------------------------
+
+
+def _layer_schema(cfg: LMConfig, moe_layer: bool) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s: dict = {"ln_attn": ParamSpec((d,), ("embed",), scale=0.0)}
+    if cfg.attn == "mla":
+        m = cfg.mla
+        qh = m.qk_nope_dim + m.qk_rope_dim
+        if m.q_lora:
+            s["wq_a"] = ParamSpec((d, m.q_lora), ("embed", None))
+            s["q_ln"] = ParamSpec((m.q_lora,), (None,), scale=0.0)
+            s["wq_b"] = ParamSpec((m.q_lora, h * qh), (None, "heads"))
+        else:
+            s["wq"] = ParamSpec((d, h * qh), ("embed", "heads"))
+        s["wkv_a"] = ParamSpec((d, m.kv_lora + m.qk_rope_dim), ("embed", None))
+        s["kv_ln"] = ParamSpec((m.kv_lora,), (None,), scale=0.0)
+        s["wkv_b"] = ParamSpec(
+            (m.kv_lora, h * (m.qk_nope_dim + m.v_dim)), (None, "heads")
+        )
+        s["wo"] = ParamSpec((h * m.v_dim, d), ("heads", "embed"))
+    else:
+        s["wq"] = ParamSpec((d, h * hd), ("embed", "heads"))
+        s["wk"] = ParamSpec((d, hkv * hd), ("embed", "kv_heads"))
+        s["wv"] = ParamSpec((d, hkv * hd), ("embed", "kv_heads"))
+        s["wo"] = ParamSpec((h * hd, d), ("heads", "embed"))
+        if cfg.qk_norm:
+            s["q_ln"] = ParamSpec((hd,), (None,), scale=0.0)
+            s["k_ln"] = ParamSpec((hd,), (None,), scale=0.0)
+    s["ln_ffn"] = ParamSpec((d,), ("embed",), scale=0.0)
+    if cfg.sandwich_norms:
+        s["ln_attn_post"] = ParamSpec((d,), ("embed",), scale=0.0)
+        s["ln_ffn_post"] = ParamSpec((d,), ("embed",), scale=0.0)
+    if moe_layer:
+        s["moe"] = moe_schema(cfg.moe)
+    else:
+        s["w_gate"] = ParamSpec((d, cfg.d_ff), ("embed", "ff"))
+        s["w_up"] = ParamSpec((d, cfg.d_ff), ("embed", "ff"))
+        s["w_down"] = ParamSpec((cfg.d_ff, d), ("ff", "embed"))
+    return s
+
+
+def _stack(schema: dict, n: int) -> dict:
+    """Prepend a layer axis of size n to every leaf."""
+    return jax.tree.map(
+        lambda p: ParamSpec((n,) + p.shape, (None,) + p.axes, p.scale),
+        schema,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def lm_schema(cfg: LMConfig) -> dict:
+    n_moe = (cfg.layers - cfg.n_dense_layers) if cfg.moe else 0
+    n_dense = cfg.layers - n_moe
+    s: dict = {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"), scale=0.02),
+        "ln_f": ParamSpec((cfg.d_model,), ("embed",), scale=0.0),
+    }
+    if n_dense:
+        s["dense_layers"] = _stack(_layer_schema(cfg, moe_layer=False), n_dense)
+    if n_moe:
+        s["moe_layers"] = _stack(_layer_schema(cfg, moe_layer=True), n_moe)
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamSpec(
+            (cfg.d_model, cfg.vocab), ("embed", "vocab"), scale=0.02
+        )
+    return s
+
+
+# ---------------------------------------------------------------------------
+# attention variants
+# ---------------------------------------------------------------------------
+
+
+def _flash_attention(q, k, v, q_pos, k_pos, *, scale, window, attn_softcap, chunk):
+    """Two-level scan flash attention with online softmax.
+
+    q: (B,Sq,H,D), k/v: (B,Sk,Hkv,D).  Memory O(Sq*chunk) per block.
+    """
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    rep = h // hkv
+    qc = min(chunk, sq)
+    kc = min(chunk, sk)
+    assert sq % qc == 0 and sk % kc == 0, (sq, sk, chunk)
+
+    qg = q.reshape(b, sq // qc, qc, hkv, rep, d)
+    kg = k.reshape(b, sk // kc, kc, hkv, d)
+    vg = v.reshape(b, sk // kc, kc, hkv, dv)
+    qp = q_pos.reshape(b, sq // qc, qc)
+    kp = k_pos.reshape(b, sk // kc, kc)
+
+    @jax.checkpoint
+    def q_block(carry, qi):
+        qb, qpb = qi  # (B,qc,hkv,rep,d), (B,qc)
+
+        @jax.checkpoint
+        def kv_block(st, ki):
+            m, l, acc = st
+            kb, vb, kpb = ki
+            logits = (
+                jnp.einsum("bqhrd,bkhd->bhrqk", qb, kb).astype(jnp.float32) * scale
+            )
+            if attn_softcap is not None:
+                logits = softcap(logits, attn_softcap)
+            ok = kpb[:, None, :] <= qpb[:, :, None]
+            if window is not None:
+                ok &= kpb[:, None, :] > qpb[:, :, None] - window
+            logits = logits + jnp.where(ok, 0.0, -1e30)[:, None, None, :, :]
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhrqk,bkhd->bhrqd", p.astype(vb.dtype), vb
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, hkv, rep, qc), -jnp.inf, jnp.float32),
+            jnp.zeros((b, hkv, rep, qc), jnp.float32),
+            jnp.zeros((b, hkv, rep, qc, dv), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, init, (kg.swapaxes(0, 1), vg.swapaxes(0, 1), kp.swapaxes(0, 1))
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return carry, out.astype(q.dtype)
+
+    _, blocks = jax.lax.scan(
+        q_block, None, (qg.swapaxes(0, 1), qp.swapaxes(0, 1))
+    )  # (nq, B, hkv, rep, qc, dv)
+    out = jnp.transpose(blocks, (1, 0, 4, 2, 3, 5)).reshape(b, sq, h, dv)
+    return out
+
+
+def _flash_attention_triangle(
+    q, k, v, q_pos, k_pos, *, scale, window, attn_softcap, chunk
+):
+    """Causal block-skip flash attention (§Perf optimization).
+
+    Iterates a single scan over the STATIC list of lower-triangle
+    (q_block, kv_block) pairs — nq*(nq+1)/2 steps instead of nq*nk — so the
+    fully-masked upper half is never computed: ~2x fewer attention FLOPs
+    and HBM bytes than the rectangle version at equal numerics (the inner
+    online-softmax math is identical).
+    """
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    rep = h // hkv
+    qc = min(chunk, sq)
+    kc = min(chunk, sk)
+    assert sq % qc == 0 and sk % kc == 0 and sq == sk, (sq, sk, chunk)
+    nq = sq // qc
+
+    qg = q.reshape(b, nq, qc, hkv, rep, d).swapaxes(0, 1)  # (nq,B,qc,hkv,rep,d)
+    kg = k.reshape(b, nq, kc, hkv, d).swapaxes(0, 1)
+    vg = v.reshape(b, nq, kc, hkv, dv).swapaxes(0, 1)
+    qp = q_pos.reshape(b, nq, qc).swapaxes(0, 1)
+    kp = k_pos.reshape(b, nq, kc).swapaxes(0, 1)
+
+    pairs = [(qi, ki) for qi in range(nq) for ki in range(qi + 1)]
+    qi_arr = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    ki_arr = jnp.asarray([p[1] for p in pairs], jnp.int32)
+
+    @jax.checkpoint
+    def step(carry, idx):
+        m, l, acc = carry  # (nq,B,hkv,rep,qc[,dv])
+        qi, ki = idx
+        qb = jax.lax.dynamic_index_in_dim(qg, qi, 0, keepdims=False)
+        kb = jax.lax.dynamic_index_in_dim(kg, ki, 0, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(vg, ki, 0, keepdims=False)
+        qpb = jax.lax.dynamic_index_in_dim(qp, qi, 0, keepdims=False)
+        kpb = jax.lax.dynamic_index_in_dim(kp, ki, 0, keepdims=False)
+        logits = (
+            jnp.einsum("bqhrd,bkhd->bhrqk", qb, kb).astype(jnp.float32) * scale
+        )
+        if attn_softcap is not None:
+            logits = softcap(logits, attn_softcap)
+        ok = kpb[:, None, :] <= qpb[:, :, None]
+        if window is not None:
+            ok &= kpb[:, None, :] > qpb[:, :, None] - window
+        logits = logits + jnp.where(ok, 0.0, -1e30)[:, None, None, :, :]
+        m_i = jax.lax.dynamic_index_in_dim(m, qi, 0, keepdims=False)
+        l_i = jax.lax.dynamic_index_in_dim(l, qi, 0, keepdims=False)
+        a_i = jax.lax.dynamic_index_in_dim(acc, qi, 0, keepdims=False)
+        m_new = jnp.maximum(m_i, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m_i - m_new)
+        l_new = l_i * corr + jnp.sum(p, axis=-1)
+        a_new = a_i * corr[..., None] + jnp.einsum(
+            "bhrqk,bkhd->bhrqd", p.astype(vb.dtype), vb
+        ).astype(jnp.float32)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, qi, 0)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, qi, 0)
+        return (m, l, acc), None
+
+    init = (
+        jnp.full((nq, b, hkv, rep, qc), -jnp.inf, jnp.float32),
+        jnp.zeros((nq, b, hkv, rep, qc), jnp.float32),
+        jnp.zeros((nq, b, hkv, rep, qc, dv), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(step, init, (qi_arr, ki_arr))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (nq,B,hkv,rep,qc,dv)
+    out = jnp.transpose(out, (1, 0, 4, 2, 3, 5)).reshape(b, sq, h, dv)
+    return out.astype(q.dtype)
+
+
+def _attend(q, k, v, q_pos, k_pos, cfg: LMConfig, window, *, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(q.shape[-1])
+    sq, sk = q.shape[1], k.shape[1]
+    if sq > cfg.flash_chunk and sq % cfg.flash_chunk == 0 and sk % cfg.flash_chunk == 0:
+        if cfg.flash_block_skip and sq == sk:
+            return _flash_attention_triangle(
+                q, k, v, q_pos, k_pos,
+                scale=scale, window=window,
+                attn_softcap=cfg.attn_softcap, chunk=cfg.flash_chunk,
+            )
+        return _flash_attention(
+            q, k, v, q_pos, k_pos,
+            scale=scale, window=window,
+            attn_softcap=cfg.attn_softcap, chunk=cfg.flash_chunk,
+        )
+    mask = make_attn_mask(q_pos, k_pos, window)
+    return attention(q, k, v, mask, scale=scale, attn_softcap=cfg.attn_softcap)
+
+
+# model-axis degree of the production meshes (mesh.py); used to pick the
+# cache layout that avoids collectives for each arch.
+PRODUCTION_MODEL_DEGREE = 16
+
+
+def _use_ring_cache(n_kv_heads: int) -> bool:
+    """S-sharded ring caches when kv heads can't shard the model axis.
+
+    Measured (EXPERIMENTS.md §Perf cell 2): head-sharded DUS caches
+    all-gather the whole cache when kv %% 16 != 0 (qwen3: 37 GB/step); when
+    kv DOES divide (codeqwen's 32), DUS is strictly cheaper than the ring
+    rewrite (2.4x bytes) — so pick per arch."""
+    if os.environ.get("REPRO_BASELINE") == "1":
+        return False
+    return n_kv_heads % PRODUCTION_MODEL_DEGREE != 0
+
+
+def _ring_write(cache, new, pos, ring: bool = True):
+    """Write ``new`` (B, 1, ...) into slot ``pos`` of ``cache`` (B, S, ...).
+
+    ring=True: select against an iota — zero-collective under any sharding
+    of S.  ring=False: dynamic-update-slice (cheaper HBM-wise; requires the
+    cache NOT to be sharded along S)."""
+    if not ring or os.environ.get("REPRO_BASELINE") == "1":
+        return jax.lax.dynamic_update_slice_in_dim(
+            cache, new.astype(cache.dtype), pos, axis=1
+        )
+    idx = jnp.arange(cache.shape[1], dtype=jnp.int32)
+    sel = (idx == pos).reshape((1, -1) + (1,) * (cache.ndim - 2))
+    return jnp.where(sel, new.astype(cache.dtype), cache)
+
+
+def _gqa_attn(w, x, cfg: LMConfig, rope, q_pos, k_pos, window, cache=None):
+    """Returns (out, new_cache).  cache = dict(k=(B,S,hkv,hd), v=...) or None."""
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ w["wq"]).reshape(b, s, h, hd)
+    k = (x @ w["wk"]).reshape(b, s, hkv, hd)
+    v = (x @ w["wv"]).reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, w["q_ln"])
+        k = rms_norm(k, w["k_ln"])
+    q = apply_rope(q, rope, q_pos)
+    k = apply_rope(k, rope, q_pos)
+    if cache is not None:
+        pos = q_pos[0, 0]  # decode: same position across batch
+        # §Perf: where-based write instead of dynamic-update-slice — fully
+        # shardable along the (model-sharded) sequence axis, so GSPMD never
+        # all-gathers the cache (the DUS resharding pathology).
+        ring = _use_ring_cache(cfg.n_kv_heads)
+        ck = _ring_write(cache["k"], k, pos, ring)
+        cv = _ring_write(cache["v"], v, pos, ring)
+        out = _attend(q, ck, cv, q_pos, k_pos, cfg, window)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        out = _attend(q, k, v, q_pos, k_pos, cfg, window)
+        new_cache = None
+    return out.reshape(b, s, h * hd) @ w["wo"], new_cache
+
+
+def _mla_attn(w, x, cfg: LMConfig, rope, q_pos, k_pos, window, cache=None):
+    """MLA with compressed-latent KV cache: cache = dict(ckv=(B,S,kv_lora),
+    krope=(B,S,rope_dim)).  Baseline decodes by expanding the latent."""
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    if m.q_lora:
+        ql = rms_norm(x @ w["wq_a"], w["q_ln"])
+        q = (ql @ w["wq_b"]).reshape(b, s, h, m.qk_nope_dim + m.qk_rope_dim)
+    else:
+        q = (x @ w["wq"]).reshape(b, s, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, rope, q_pos)
+
+    kv = x @ w["wkv_a"]  # (B,S,kv_lora+rope)
+    ckv, krope = jnp.split(kv, [m.kv_lora], axis=-1)
+    ckv = rms_norm(ckv, w["kv_ln"])
+    krope = apply_rope(krope[:, :, None, :], rope, q_pos)[:, :, 0, :]
+
+    if cache is not None:
+        pos = q_pos[0, 0]
+        ckv = _ring_write(cache["ckv"], ckv, pos)
+        krope = _ring_write(cache["krope"], krope, pos)
+        new_cache = {"ckv": ckv, "krope": krope}
+    else:
+        new_cache = None
+
+    sk = ckv.shape[1]
+    kvx = (ckv @ w["wkv_b"]).reshape(b, sk, h, m.qk_nope_dim + m.v_dim)
+    k_nope, v = jnp.split(kvx, [m.qk_nope_dim], axis=-1)
+    k_rope_b = jnp.broadcast_to(krope[:, :, None, :], (b, sk, h, m.qk_rope_dim))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    out = _attend(q_full, k_full, v, q_pos, k_pos, cfg, window, scale=scale)
+    return out.reshape(b, s, h * m.v_dim) @ w["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# layer / model forward
+# ---------------------------------------------------------------------------
+
+
+def _ffn(w, x, cfg: LMConfig):
+    g = x @ w["w_gate"]
+    u = x @ w["w_up"]
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = act(g.astype(jnp.float32)).astype(u.dtype) * u
+    return h @ w["w_down"]
+
+
+def _layer(w, x, cfg: LMConfig, rope, q_pos, k_pos, window, moe_layer, cache):
+    if cache is None and x.shape[1] > 1 and os.environ.get("REPRO_SEQ_PARALLEL") == "1":
+        # Sequence-parallel residual stream (Megatron-SP style).  Measured
+        # on deepseek-v3 train_4k: -26% live activations but +3.2x
+        # collective wire (per-layer x all-gathers) -> net loss on the
+        # roofline; kept behind a flag.  See EXPERIMENTS.md §Perf
+        # (refuted-hypothesis log); microbatching is the adopted fix.
+        x = shard_hint(x, BATCH, "model", None)
+    h_in = rms_norm(x, w["ln_attn"])
+    attn_fn = _mla_attn if cfg.attn == "mla" else _gqa_attn
+    attn_out, new_cache = attn_fn(w, h_in, cfg, rope, q_pos, k_pos, window, cache)
+    if cfg.sandwich_norms:
+        attn_out = rms_norm(attn_out, w["ln_attn_post"])
+    x = x + attn_out
+    h2 = rms_norm(x, w["ln_ffn"])
+    if moe_layer:
+        b, s, d = h2.shape
+        ffn_out = moe_ffn(w["moe"], h2.reshape(b * s, d), cfg.moe).reshape(b, s, d)
+    else:
+        ffn_out = _ffn(w, h2, cfg)
+    if cfg.sandwich_norms:
+        ffn_out = rms_norm(ffn_out, w["ln_ffn_post"])
+    return x + ffn_out, new_cache
+
+
+def _layer_windows(cfg: LMConfig, n_layers: int, offset: int = 0):
+    """Per-layer sliding-window size array (None encoded as 0)."""
+    if cfg.window is None or cfg.window_pattern == "none":
+        return [None] * n_layers
+    if cfg.window_pattern == "all":
+        return [cfg.window] * n_layers
+    # alternate: even layers local, odd global (gemma2)
+    return [cfg.window if (i + offset) % 2 == 0 else None for i in range(n_layers)]
+
+
+def _run_stack(stack_w, x, cfg, rope, q_pos, k_pos, moe_layer, caches, windows):
+    """scan over a homogeneous layer stack. windows: list -> traced per-layer
+    int array (0 = global) consumed via two-mask select inside the body."""
+    n_layers = jax.tree.leaves(stack_w)[0].shape[0]
+    win_arr = jnp.asarray([0 if w is None else w for w in windows], jnp.int32)
+    uniform = all(w == windows[0] for w in windows)
+
+    def body(x, xs):
+        w, win, cache = xs
+        if uniform:
+            window = windows[0]
+        else:
+            # alternate local/global: realized as window-size select; the
+            # flash kernel takes a traced window bound.
+            window = jnp.where(win > 0, win, jnp.iinfo(jnp.int32).max // 2)
+        x, new_cache = _layer(
+            w, x, cfg, rope, q_pos, k_pos, window, moe_layer, cache
+        )
+        return x, new_cache
+
+    # per-layer remat: backward recomputes one layer at a time, so only the
+    # (L, B, S, d) carries persist — not per-layer attention residuals.
+    if caches is None:
+        body = jax.checkpoint(body)
+    xs = (stack_w, win_arr, caches)
+    x, new_caches = jax.lax.scan(body, x, xs)
+    return x, new_caches
+
+
+def _embed(params, cfg: LMConfig, tokens):
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    # batch over (pod, data); for batch=1 long-context shapes the hint
+    # falls back to sequence sharding over data.
+    x = shard_hint(x, BATCH, "data" if x.shape[0] == 1 else None, None)
+    return x
+
+
+def _unembed(params, cfg: LMConfig, x):
+    x = rms_norm(x, params["ln_f"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head).astype(jnp.float32)
+    if cfg.logit_softcap is not None:
+        logits = softcap(logits, cfg.logit_softcap)
+    return logits
+
+
+def forward(params, cfg: LMConfig, tokens, prefix_embeds=None):
+    """Full-sequence forward (train / prefill). tokens: (B, S) -> logits."""
+    x = _embed(params, cfg, tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    rope_dim = cfg.mla.qk_rope_dim if cfg.attn == "mla" else cfg.head_dim
+    rope = rope_inv_freq(rope_dim, cfg.rope_base)
+
+    n_moe = (cfg.layers - cfg.n_dense_layers) if cfg.moe else 0
+    n_dense = cfg.layers - n_moe
+    if n_dense:
+        wins = _layer_windows(cfg, n_dense)
+        x, _ = _run_stack(
+            params["dense_layers"], x, cfg, rope, pos, pos, False, None, wins
+        )
+    if n_moe:
+        wins = _layer_windows(cfg, n_moe, offset=n_dense)
+        x, _ = _run_stack(
+            params["moe_layers"], x, cfg, rope, pos, pos, True, None, wins
+        )
+    return _unembed(params, cfg, x)
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Stacked (L-leading) KV caches for decode."""
+    n_moe = (cfg.layers - cfg.n_dense_layers) if cfg.moe else 0
+    n_dense = cfg.layers - n_moe
+
+    def one(n):
+        if cfg.attn == "mla":
+            m = cfg.mla
+            return {
+                "ckv": jnp.zeros((n, batch, max_len, m.kv_lora), dtype),
+                "krope": jnp.zeros((n, batch, max_len, m.qk_rope_dim), dtype),
+            }
+        return {
+            "k": jnp.zeros((n, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((n, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        }
+
+    out = {}
+    if n_dense:
+        out["dense"] = one(n_dense)
+    if n_moe:
+        out["moe"] = one(n_moe)
+    return out
+
+
+def cache_spec(cfg: LMConfig):
+    """Logical axes for cache sharding: batch over data, heads over model."""
+    if cfg.attn == "mla":
+        return {"ckv": ("layers", "batch", "seq", None),
+                "krope": ("layers", "batch", "seq", None)}
+    return {"k": ("layers", "batch", "seq", "kv_heads", None),
+            "v": ("layers", "batch", "seq", "kv_heads", None)}
+
+
+def decode_step(params, cfg: LMConfig, cache, tokens, pos):
+    """One decode step. tokens: (B, 1); pos: scalar int32 (next position).
+    Returns (logits, new_cache)."""
+    x = _embed(params, cfg, tokens)
+    b = x.shape[0]
+    max_len = jax.tree.leaves(cache)[0].shape[2]
+    q_pos = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
+    k_pos = jnp.broadcast_to(jnp.arange(max_len, dtype=jnp.int32), (b, max_len))
+    # mask out not-yet-written cache slots via the causal test k_pos <= q_pos
+    rope_dim = cfg.mla.qk_rope_dim if cfg.attn == "mla" else cfg.head_dim
+    rope = rope_inv_freq(rope_dim, cfg.rope_base)
+
+    n_moe = (cfg.layers - cfg.n_dense_layers) if cfg.moe else 0
+    n_dense = cfg.layers - n_moe
+    new_cache = {}
+    if n_dense:
+        wins = _layer_windows(cfg, n_dense)
+        x, nc = _run_stack(
+            params["dense_layers"], x, cfg, rope, q_pos, k_pos, False,
+            cache["dense"], wins,
+        )
+        new_cache["dense"] = nc
+    if n_moe:
+        wins = _layer_windows(cfg, n_moe, offset=n_dense)
+        x, nc = _run_stack(
+            params["moe_layers"], x, cfg, rope, q_pos, k_pos, True,
+            cache["moe"], wins,
+        )
+        new_cache["moe"] = nc
+    return _unembed(params, cfg, x), new_cache
+
+
+def lm_loss(params, cfg: LMConfig, tokens, targets, prefix_embeds=None):
+    logits = forward(params, cfg, tokens, prefix_embeds)
+    if prefix_embeds is not None:
+        logits = logits[:, prefix_embeds.shape[1] :]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)

@@ -1,0 +1,230 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment, the conv/mel frontend is a STUB: ``input_specs`` feeds
+precomputed frame embeddings (B, S_enc, d) straight into the encoder.
+Encoder: bidirectional self-attention.  Decoder: causal self-attention +
+cross-attention to the encoder output, with a self-KV cache and
+precomputed cross-KV for decode.  Norms are RMS (simplification noted in
+DESIGN.md); activations GELU as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import BATCH, shard_hint
+
+from .common import ParamSpec, attention, make_attn_mask, rms_norm
+from .transformer import _flash_attention, _ring_write
+
+
+@dataclasses.dataclass(frozen=True)
+class WhisperConfig:
+    name: str
+    enc_layers: int
+    dec_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    enc_len: int = 1500
+    max_dec_len: int = 32768
+    flash_chunk: int = 1024
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+
+def _attn_schema(d, axes=("embed", "heads")):
+    return {
+        "wq": ParamSpec((d, d), axes),
+        "wk": ParamSpec((d, d), axes),
+        "wv": ParamSpec((d, d), axes),
+        "wo": ParamSpec((d, d), (axes[1], axes[0])),
+    }
+
+
+def _enc_layer_schema(cfg):
+    d = cfg.d_model
+    return {
+        "ln1": ParamSpec((d,), ("embed",), scale=0.0),
+        "self": _attn_schema(d),
+        "ln2": ParamSpec((d,), ("embed",), scale=0.0),
+        "w_up": ParamSpec((d, cfg.d_ff), ("embed", "ff")),
+        "w_down": ParamSpec((cfg.d_ff, d), ("ff", "embed")),
+    }
+
+
+def _dec_layer_schema(cfg):
+    s = _enc_layer_schema(cfg)
+    s["ln_cross"] = ParamSpec((cfg.d_model,), ("embed",), scale=0.0)
+    s["cross"] = _attn_schema(cfg.d_model)
+    return s
+
+
+def _stack(schema, n):
+    return jax.tree.map(
+        lambda p: ParamSpec((n,) + p.shape, (None,) + p.axes, p.scale),
+        schema,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def whisper_schema(cfg: WhisperConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "embed": ParamSpec((cfg.vocab, d), ("vocab", "embed"), scale=0.02),
+        "pos_dec": ParamSpec((cfg.max_dec_len, d), (None, "embed"), scale=0.01),
+        "pos_enc": ParamSpec((cfg.enc_len, d), (None, "embed"), scale=0.01),
+        "enc_layers": _stack(_enc_layer_schema(cfg), cfg.enc_layers),
+        "dec_layers": _stack(_dec_layer_schema(cfg), cfg.dec_layers),
+        "ln_enc": ParamSpec((d,), ("embed",), scale=0.0),
+        "ln_dec": ParamSpec((d,), ("embed",), scale=0.0),
+    }
+
+
+def _mha(w, xq, xkv, mask, cfg, q_pos=None, k_pos=None, causal=False):
+    b, sq, d = xq.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = (xq @ w["wq"]).reshape(b, sq, h, hd)
+    k = (xkv @ w["wk"]).reshape(b, -1, h, hd)
+    v = (xkv @ w["wv"]).reshape(b, -1, h, hd)
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    if (
+        causal
+        and sq > cfg.flash_chunk
+        and sq % cfg.flash_chunk == 0
+        and sk % cfg.flash_chunk == 0
+    ):
+        out = _flash_attention(
+            q, k, v, q_pos, k_pos, scale=scale, window=None,
+            attn_softcap=None, chunk=cfg.flash_chunk,
+        )
+    else:
+        out = attention(q, k, v, mask, scale=scale)
+    return out.reshape(b, sq, d) @ w["wo"]
+
+
+def _ffn(w, x):
+    h = jax.nn.gelu((x @ w["w_up"]).astype(jnp.float32)).astype(x.dtype)
+    return h @ w["w_down"]
+
+
+def encode(params, cfg: WhisperConfig, frames):
+    """frames: (B, enc_len, d) stub embeddings -> encoder states."""
+    x = frames + params["pos_enc"][None].astype(frames.dtype)
+    x = shard_hint(x, BATCH, None, None)
+    b, s, _ = x.shape
+    zero_mask = jnp.zeros((b, 1, s, s), jnp.float32)
+
+    @jax.checkpoint
+    def body(x, w):
+        h = rms_norm(x, w["ln1"])
+        x = x + _mha(w["self"], h, h, zero_mask, cfg)
+        h = rms_norm(x, w["ln2"])
+        return x + _ffn(w, h), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rms_norm(x, params["ln_enc"])
+
+
+def decode(params, cfg: WhisperConfig, tokens, enc_out):
+    """Teacher-forced decoder pass. tokens: (B, S_dec)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens] + params["pos_dec"][:s][None].astype(jnp.bfloat16)
+    x = shard_hint(x, BATCH, None, None)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    causal = make_attn_mask(pos, pos)
+    cross_mask = jnp.zeros((b, 1, s, enc_out.shape[1]), jnp.float32)
+
+    @jax.checkpoint
+    def body(x, w):
+        h = rms_norm(x, w["ln1"])
+        x = x + _mha(w["self"], h, h, causal, cfg, pos, pos, causal=True)
+        h = rms_norm(x, w["ln_cross"])
+        x = x + _mha(w["cross"], h, enc_out, cross_mask, cfg)
+        h = rms_norm(x, w["ln2"])
+        return x + _ffn(w, h), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = rms_norm(x, params["ln_dec"])
+    return (x @ params["embed"].T).astype(jnp.float32)
+
+
+def forward(params, cfg: WhisperConfig, frames, tokens):
+    return decode(params, cfg, tokens, encode(params, cfg, frames))
+
+
+def init_cache(cfg: WhisperConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    h, hd = cfg.n_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((cfg.dec_layers, batch, max_len, h, hd), dtype),
+        "v": jnp.zeros((cfg.dec_layers, batch, max_len, h, hd), dtype),
+        # cross K/V precomputed once per request at prefill
+        "ck": jnp.zeros((cfg.dec_layers, batch, cfg.enc_len, h, hd), dtype),
+        "cv": jnp.zeros((cfg.dec_layers, batch, cfg.enc_len, h, hd), dtype),
+    }
+
+
+def precompute_cross_kv(params, cfg: WhisperConfig, enc_out, cache):
+    h, hd = cfg.n_heads, cfg.head_dim
+    b = enc_out.shape[0]
+    dec = params["dec_layers"]["cross"]
+    ck = jnp.einsum("bsd,ldh->lbsh", enc_out, dec["wk"]).reshape(
+        cfg.dec_layers, b, cfg.enc_len, h, hd
+    )
+    cv = jnp.einsum("bsd,ldh->lbsh", enc_out, dec["wv"]).reshape(
+        cfg.dec_layers, b, cfg.enc_len, h, hd
+    )
+    return {**cache, "ck": ck.astype(cache["ck"].dtype), "cv": cv.astype(cache["cv"].dtype)}
+
+
+def decode_step(params, cfg: WhisperConfig, cache, tokens, pos):
+    """One decoder token with self-KV cache + precomputed cross-KV."""
+    b = tokens.shape[0]
+    h, hd = cfg.n_heads, cfg.head_dim
+    max_len = cache["k"].shape[2]
+    x = params["embed"][tokens] + jax.lax.dynamic_slice_in_dim(
+        params["pos_dec"], pos, 1, axis=0
+    )[None].astype(jnp.bfloat16)
+    q_pos = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
+    k_pos = jnp.broadcast_to(jnp.arange(max_len, dtype=jnp.int32), (b, max_len))
+    self_mask = make_attn_mask(q_pos, k_pos)
+    cross_mask = jnp.zeros((b, 1, 1, cfg.enc_len), jnp.float32)
+
+    def body(x, xs):
+        w, kc, vc, ckc, cvc = xs
+        hn = rms_norm(x, w["ln1"])
+        q = (hn @ w["self"]["wq"]).reshape(b, 1, h, hd)
+        k = (hn @ w["self"]["wk"]).reshape(b, 1, h, hd)
+        v = (hn @ w["self"]["wv"]).reshape(b, 1, h, hd)
+        kc = _ring_write(kc, k, pos)
+        vc = _ring_write(vc, v, pos)
+        out = attention(q, kc, vc, self_mask, scale=1.0 / math.sqrt(hd))
+        x = x + out.reshape(b, 1, -1) @ w["self"]["wo"]
+        hn = rms_norm(x, w["ln_cross"])
+        qc = (hn @ w["cross"]["wq"]).reshape(b, 1, h, hd)
+        outc = attention(qc, ckc, cvc, cross_mask, scale=1.0 / math.sqrt(hd))
+        x = x + outc.reshape(b, 1, -1) @ w["cross"]["wo"]
+        hn = rms_norm(x, w["ln2"])
+        x = x + _ffn(w, hn)
+        return x, (kc, vc)
+
+    x, (kcs, vcs) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"], cache["ck"], cache["cv"])
+    )
+    x = rms_norm(x, params["ln_dec"])
+    logits = (x @ params["embed"].T).astype(jnp.float32)
+    return logits, {**cache, "k": kcs, "v": vcs}
+
+
+def lm_loss(params, cfg: WhisperConfig, frames, tokens, targets):
+    logits = forward(params, cfg, frames, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)

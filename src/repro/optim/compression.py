@@ -1,0 +1,81 @@
+"""Gradient compression for cross-pod reduction.
+
+Two schemes, both with error feedback so compression noise does not bias
+the optimizer:
+
+* int8 stochastic-free linear quantization (per-leaf absmax scaling) —
+  4x cross-pod bytes reduction; decompression is exact up to 1/127 absmax.
+* top-k sparsification (keep the largest |g| entries per leaf).
+
+Usage in the train step: grads are reduced normally inside a pod (full
+ICI bandwidth); the *cross-pod* contribution is compressed before the
+"pod"-axis reduction.  In the single-program pjit view we model this as
+compress -> decompress around the pod-mean, which makes the numerics of
+the deployed system reproducible in tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_compress(x):
+    absmax = jnp.max(jnp.abs(x)) + 1e-12
+    q = jnp.clip(jnp.round(x / absmax * 127.0), -127, 127).astype(jnp.int8)
+    return q, absmax
+
+
+def int8_decompress(q, absmax):
+    return q.astype(jnp.float32) * (absmax / 127.0)
+
+
+def topk_compress(x, frac: float):
+    flat = x.reshape(-1)
+    k = max(int(flat.size * frac), 1)
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    kept = flat[idx]
+    return kept, idx, flat.size
+
+
+def topk_decompress(kept, idx, size, shape):
+    out = jnp.zeros((size,), kept.dtype).at[idx].set(kept)
+    return out.reshape(shape)
+
+
+def compress_tree(grads, residual, scheme: str = "int8", topk_frac: float = 0.01):
+    """Error-feedback compression: returns (decompressed_grads, new_residual).
+
+    ``residual`` accumulates what compression dropped; it is added back
+    before the next round (error feedback / EF21-style).
+    """
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        if scheme == "int8":
+            q, s = int8_compress(x)
+            d = int8_decompress(q, s)
+        elif scheme == "topk":
+            kept, idx, size = topk_compress(x, topk_frac)
+            d = topk_decompress(kept, idx, size, x.shape)
+        else:
+            raise ValueError(scheme)
+        return d.astype(g.dtype), x - d
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    dec = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    res = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    return dec, res
+
+
+def compressed_bytes(grads, scheme: str = "int8", topk_frac: float = 0.01) -> int:
+    """Cross-pod bytes after compression (for the roofline collective term)."""
+    n = sum(x.size for x in jax.tree.leaves(grads))
+    if scheme == "int8":
+        return n  # 1 byte/entry
+    if scheme == "topk":
+        return int(n * topk_frac) * 8  # value + index
+    raise ValueError(scheme)

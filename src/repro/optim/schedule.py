@@ -1,0 +1,10 @@
+"""LR schedules (pure functions of the step counter)."""
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(step, *, warmup: int, total: int, min_ratio: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos

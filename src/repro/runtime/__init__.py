@@ -1,0 +1,7 @@
+from .cluster import (
+    ClusterDegraded,
+    FcdccCluster,
+    LayerTiming,
+    StragglerModel,
+    run_layer_elastic,
+)

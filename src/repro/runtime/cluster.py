@@ -1,0 +1,172 @@
+"""Simulated master/worker cluster for FCDCC.
+
+Mirrors the paper's mpi4py methodology on one host: a thread pool of n
+workers, per-worker injected delays (``sleep()``-style stragglers, as in
+Experiment 4), random unavailability, and hard failures.  The master
+collects the *fastest delta* results and decodes immediately — later
+arrivals are discarded, exactly like the paper's asynchronous collection.
+
+Also provides:
+  * ``run_layer`` — one FCDCC ConvL end-to-end with timing breakdown
+    (encode / upload / compute / download / decode), simulated-clock mode
+    for deterministic tests and real-thread mode for wall-clock numbers.
+  * elastic recovery: if more than gamma workers fail outright, the master
+    re-plans with a smaller (k_a, k_b) grid (fewer subtasks) and re-runs —
+    the framework-level restart path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+
+import jax
+import numpy as np
+
+from repro.core.fcdcc import CodedConv2d, FcdccPlan
+from repro.core.partition import ConvGeometry
+
+
+@dataclasses.dataclass
+class StragglerModel:
+    """Per-worker latency injection (seconds added to compute time)."""
+
+    delays: np.ndarray  # (n,) extra seconds; np.inf = dead worker
+
+    @staticmethod
+    def none(n: int) -> "StragglerModel":
+        return StragglerModel(np.zeros(n))
+
+    @staticmethod
+    def fixed(n: int, stragglers: int, delay: float, seed: int = 0) -> "StragglerModel":
+        rng = np.random.default_rng(seed)
+        d = np.zeros(n)
+        idx = rng.choice(n, size=stragglers, replace=False)
+        d[idx] = delay
+        return StragglerModel(d)
+
+    @staticmethod
+    def random_uniform(n: int, p: float, delay: float, seed: int = 0) -> "StragglerModel":
+        rng = np.random.default_rng(seed)
+        return StragglerModel(np.where(rng.random(n) < p, delay, 0.0))
+
+
+@dataclasses.dataclass
+class LayerTiming:
+    encode_s: float
+    compute_s: float  # master-visible completion time of the delta-th result
+    decode_s: float
+    worker_compute_s: list
+    used_workers: list
+
+    @property
+    def total_s(self):
+        return self.encode_s + self.compute_s + self.decode_s
+
+
+class FcdccCluster:
+    """n simulated workers executing coded conv subtasks."""
+
+    def __init__(self, plan: FcdccPlan, straggler: StragglerModel | None = None,
+                 mode: str = "threads", backend: str = "lax"):
+        assert mode in ("threads", "simulated")
+        self.plan = plan
+        self.straggler = straggler or StragglerModel.none(plan.n)
+        self.mode = mode
+        self.backend = backend
+
+    def run_layer(self, geo: ConvGeometry, x, k, *, coded_filters=None) -> tuple:
+        """Returns (y, LayerTiming).  ``coded_filters`` may be pre-encoded
+        (the deployment case where filters are resident on workers)."""
+        layer = CodedConv2d(self.plan, geo, backend=self.backend)
+        n, delta = self.plan.n, self.plan.delta
+
+        t0 = time.perf_counter()
+        xe = jax.block_until_ready(layer.encode_inputs(x))
+        ke = coded_filters
+        if ke is None:
+            ke = jax.block_until_ready(layer.encode_filters(k))
+        t_encode = time.perf_counter() - t0
+
+        compute = jax.jit(layer.worker_compute)
+        # warm the kernel once so per-worker timings measure steady state
+        jax.block_until_ready(compute(xe[0], ke[0]))
+
+        worker_times = [0.0] * n
+        results: dict[int, np.ndarray] = {}
+
+        def work(i):
+            if not np.isfinite(self.straggler.delays[i]):
+                raise RuntimeError(f"worker {i} failed")
+            t = time.perf_counter()
+            out = jax.block_until_ready(compute(xe[i], ke[i]))
+            dt = time.perf_counter() - t
+            if self.mode == "threads" and self.straggler.delays[i] > 0:
+                time.sleep(self.straggler.delays[i])
+            worker_times[i] = dt + self.straggler.delays[i]
+            return i, out
+
+        t1 = time.perf_counter()
+        if self.mode == "threads":
+            ex = ThreadPoolExecutor(max_workers=n)
+            futs = {ex.submit(work, i) for i in range(n)}
+            pending = set(futs)
+            while len(results) < delta and pending:
+                done, pending = wait(pending, return_when=FIRST_COMPLETED)
+                for f in done:
+                    try:
+                        i, out = f.result()
+                        results[i] = out
+                    except RuntimeError:
+                        pass
+            # fastest-delta collected; do NOT join stragglers (the paper's
+            # asynchronous master discards them)
+            t_compute = time.perf_counter() - t1
+            ex.shutdown(wait=False, cancel_futures=True)
+        else:  # simulated clock: compute all, completion = max over chosen
+            for i in range(n):
+                if np.isfinite(self.straggler.delays[i]):
+                    _, out = work(i)
+                    results[i] = out
+            order = sorted(results, key=lambda i: worker_times[i])
+            results = {i: results[i] for i in order[:delta]}
+            t_compute = max(worker_times[i] for i in results) if results else float("inf")
+
+        if len(results) < delta:
+            raise ClusterDegraded(
+                f"only {len(results)} of delta={delta} results; "
+                f"gamma={self.plan.gamma} exceeded"
+            )
+
+        ids = list(results)[:delta]
+        outs = np.stack([np.asarray(results[i]) for i in ids], axis=0)
+        t2 = time.perf_counter()
+        y = jax.block_until_ready(layer.decode(ids, jax.numpy.asarray(outs)))
+        t_decode = time.perf_counter() - t2
+        return y, LayerTiming(t_encode, t_compute, t_decode, worker_times, ids)
+
+
+class ClusterDegraded(RuntimeError):
+    pass
+
+
+def run_layer_elastic(plan: FcdccPlan, geo: ConvGeometry, x, k,
+                      straggler: StragglerModel, mode="simulated", max_retries=2):
+    """Elastic recovery: on ClusterDegraded, shrink the subtask grid
+    (halve k_a or k_b -> smaller delta) and retry on the surviving workers."""
+    attempt_plan = plan
+    for attempt in range(max_retries + 1):
+        cluster = FcdccCluster(attempt_plan, straggler, mode=mode)
+        try:
+            y, timing = cluster.run_layer(geo, x, k)
+            return y, timing, attempt_plan
+        except ClusterDegraded:
+            k_a, k_b = attempt_plan.k_a, attempt_plan.k_b
+            if k_a >= k_b and k_a > 1:
+                k_a = max(k_a // 2, 1)
+            elif k_b > 1:
+                k_b = max(k_b // 2, 1)
+            else:
+                raise
+            attempt_plan = FcdccPlan(n=plan.n, k_a=k_a, k_b=k_b)
+    raise ClusterDegraded("elastic retries exhausted")

@@ -1,0 +1,65 @@
+"""Mesh-aware sharding hints.
+
+``shard_hint(x, spec...)`` applies ``with_sharding_constraint`` only when a
+mesh is active (jax.set_mesh context), choosing per-dim mesh axes from the
+candidates that (a) exist in the current mesh and (b) divide the dim —
+so the same model code runs on 1 CPU device, a 16x16 pod, or a 2x16x16
+multi-pod mesh without edits (smollm's 9 heads simply fall back to
+replication, etc.).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# canonical logical axes
+BATCH = ("pod", "data")  # batch (or sequence for long-context) shards here
+MODEL = "model"
+
+__all__ = ["shard_hint", "BATCH", "MODEL", "resolve_pspec"]
+
+
+def _resolve_dim(dim: int, cand, mesh_shape) -> tuple[str, ...] | None:
+    if cand is None:
+        return None
+    if isinstance(cand, str):
+        cand = (cand,)
+    chosen = tuple(a for a in cand if a in mesh_shape)
+    if not chosen:
+        return None
+    total = math.prod(mesh_shape[a] for a in chosen)
+    if total and dim % total == 0:
+        return chosen
+    # try single best axis
+    for a in chosen:
+        if dim % mesh_shape[a] == 0:
+            return (a,)
+    return None
+
+
+def resolve_pspec(shape, axes, mesh_shape) -> P:
+    out = []
+    used: set[str] = set()
+    for dim, cand in zip(shape, axes):
+        r = _resolve_dim(dim, cand, mesh_shape)
+        if r is None or any(a in used for a in r):
+            out.append(None)
+        else:
+            used.update(r)
+            out.append(r if len(r) > 1 else r[0])
+    return P(*out)
+
+
+def shard_hint(x, *axes):
+    """Constrain ``x`` (rank == len(axes)) if a mesh is active.
+
+    Each entry of ``axes`` is None, an axis name, or a tuple of candidate
+    axis names to use jointly (e.g. ``BATCH`` = ("pod", "data")).
+    """
+    am = jax.sharding.get_abstract_mesh()
+    if am.empty:
+        return x
+    spec = resolve_pspec(x.shape, axes, dict(am.shape))
+    return jax.lax.with_sharding_constraint(x, spec)

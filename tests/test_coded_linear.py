@@ -1,0 +1,45 @@
+"""CodedLinear: FCDCC on dense layers (the LM-integration path)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.coded_linear import CodedLinear
+from repro.core.fcdcc import FcdccPlan
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("n,k_a,k_b,ids", [
+    (6, 2, 4, None),
+    (6, 2, 4, [5, 4]),
+    (8, 4, 8, [7, 5, 3, 1, 0, 2, 4, 6]),
+    (4, 1, 8, [3, 0, 1, 2]),
+    (4, 8, 1, [1, 2, 0, 3]),
+])
+def test_coded_linear_matches_matmul(n, k_a, k_b, ids):
+    plan = FcdccPlan(n=n, k_a=k_a, k_b=k_b)
+    t, d_in, d_out = 8 * max(k_a, 1), 32, 8 * max(k_b, 1)
+    layer = CodedLinear(plan, t, d_in, d_out)
+    x = jnp.asarray(RNG.standard_normal((t, d_in)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((d_in, d_out)), jnp.float32)
+    if ids is not None:
+        ids = ids[: plan.delta]
+    y = layer.run_simulated(x, w, ids)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), rtol=2e-3, atol=2e-3)
+
+
+def test_coded_ffn_block():
+    """A coded SwiGLU FFN: nonlinearity on the master side of the coded
+    boundary, both matmuls coded (the deployment pattern for LM layers)."""
+    plan = FcdccPlan(n=5, k_a=2, k_b=2)
+    t, d, f = 16, 24, 32
+    up = CodedLinear(plan, t, d, f)
+    down = CodedLinear(plan, t, f, d)
+    x = jnp.asarray(RNG.standard_normal((t, d)), jnp.float32)
+    w1 = jnp.asarray(RNG.standard_normal((d, f)), jnp.float32)
+    w2 = jnp.asarray(RNG.standard_normal((f, d)), jnp.float32)
+    h = up.run_simulated(x, w1, [4])
+    h = jnp.tanh(h)  # master-side nonlinearity
+    y = down.run_simulated(h, w2, [2])
+    ref = jnp.tanh(x @ w1) @ w2
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=2e-3, atol=2e-3)

@@ -1,0 +1,48 @@
+"""Cost model: eqs. (50)-(60), convexity, Table IV spot checks."""
+import pytest
+
+from repro.core.cost import CostWeights, continuous_optimum, cost_breakdown, optimal_partition
+from repro.models.cnn import CNN_SPECS, layer_geometry
+
+W = CostWeights(comm=0.09, store=0.023, comp=0.0)
+
+
+def test_breakdown_formulas():
+    geo = layer_geometry(CNN_SPECS["alexnet"][1][0], 227)  # conv1
+    b = cost_breakdown(geo, 2, 8, W)
+    assert b.v_comm_up == pytest.approx(4 * 3 * 227 * 227 / 2)
+    assert b.v_store == pytest.approx(2 * 96 * 3 * 11 * 11 / 8)
+    assert b.total == b.c_comm + b.c_comp + b.c_store
+
+
+def test_convexity_in_k_a():
+    """U(k_a) along k_a*k_b = Q is convex: single local minimum."""
+    geo = layer_geometry(CNN_SPECS["alexnet"][1][1], 27)
+    _, _, landscape = optimal_partition(geo, 64, W)
+    pairs = sorted(landscape.items())  # sorted by k_a
+    us = [u for _, u in pairs]
+    # differences change sign at most once
+    signs = [u2 > u1 for u1, u2 in zip(us, us[1:])]
+    assert signs == sorted(signs)
+
+
+def test_early_layers_prefer_spatial_partitioning():
+    """Paper Table IV: conv1 (large spatial, few channels) -> k_A = Q."""
+    hw, layers = CNN_SPECS["alexnet"]
+    geo = layer_geometry(layers[0], hw)
+    (ka, kb), _, _ = optimal_partition(geo, 32, W)
+    assert (ka, kb) == (32, 1)
+
+
+def test_deep_layers_prefer_channel_partitioning():
+    """Paper Table IV: VGG conv5 (small spatial, many channels) -> large k_B."""
+    geo = layer_geometry(CNN_SPECS["vgg16"][1][-1], 14)
+    (ka, kb), _, _ = optimal_partition(geo, 32, W)
+    assert kb >= 8
+
+
+def test_continuous_vs_discrete_agree_in_order():
+    geo = layer_geometry(CNN_SPECS["alexnet"][1][2], 13)
+    kc = continuous_optimum(geo, 32, W)
+    (ka, _), _, _ = optimal_partition(geo, 32, W)
+    assert 0.25 <= ka / max(kc, 1e-9) <= 4.0

@@ -1,0 +1,75 @@
+"""Step-by-step decode must reproduce teacher-forced forward logits for the
+generic-transformer cache paths (ring-write GQA, DUS GQA, MLA latent)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.common import schema_init
+from repro.models.moe import MoEConfig
+from repro.models.transformer import (
+    LMConfig,
+    MLAConfig,
+    decode_step,
+    forward,
+    init_cache,
+    lm_schema,
+)
+
+CASES = {
+    "gqa": LMConfig(name="g", layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                    head_dim=16, d_ff=128, vocab=101, qk_norm=True),
+    "gqa-window": LMConfig(name="w", layers=2, d_model=64, n_heads=4,
+                           n_kv_heads=2, head_dim=16, d_ff=128, vocab=101,
+                           window=6, window_pattern="all"),
+    "gemma2-like": LMConfig(name="s", layers=2, d_model=64, n_heads=4,
+                            n_kv_heads=2, head_dim=16, d_ff=128, vocab=101,
+                            attn_softcap=50.0, logit_softcap=30.0,
+                            sandwich_norms=True, embed_scale=True),
+    "mla-moe": LMConfig(
+        name="m", layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab=101, attn="mla",
+        mla=MLAConfig(q_lora=32, kv_lora=24, qk_nope_dim=16, qk_rope_dim=8, v_dim=16),
+        moe=MoEConfig(n_routed=4, top_k=2, d_model=64, d_ff_expert=32,
+                      n_shared=1, capacity_factor=4.0),
+        n_dense_layers=1, tie_embeddings=False,
+    ),
+}
+
+
+@pytest.mark.parametrize("case", list(CASES))
+def test_decode_matches_forward(case):
+    cfg = CASES[case]
+    params = schema_init(lm_schema(cfg), jax.random.PRNGKey(0), jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab)
+    ref = forward(params, cfg, toks)
+
+    cache = init_cache(cfg, 2, 16, jnp.float32)
+    outs = []
+    for t in range(12):
+        lg, cache = decode_step(params, cfg, cache, toks[:, t : t + 1], jnp.int32(t))
+        outs.append(lg[:, 0])
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=3e-3)
+
+
+def test_hymba_ring_buffer_wraps():
+    """Hymba's windowed ring cache: decoding past the window length stays
+    finite and consistent with a fresh longer-window run on the last step."""
+    from repro.models import hymba
+
+    cfg = hymba.HymbaConfig(name="h", layers=2, d_model=64, n_heads=4,
+                            n_kv_heads=2, head_dim=16, d_ff=128, vocab=101,
+                            ssm_state=8, window=8, chunk=8)
+    params = schema_init(hymba.hymba_schema(cfg), jax.random.PRNGKey(0), jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 20), 0, 101)
+    st = hymba.init_state(cfg, 1, 64, jnp.float32)
+    for t in range(20):  # 20 > window=8: ring must wrap
+        lg, st = hymba.decode_step(params, cfg, st, toks[:, t : t + 1], jnp.int32(t))
+        assert not bool(jnp.isnan(lg).any()), t
+    ref = hymba.forward(params, cfg, toks)
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0]), np.asarray(ref[:, -1]), atol=5e-3
+    )

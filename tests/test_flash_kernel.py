@@ -1,0 +1,57 @@
+"""Pallas flash-attention kernel vs jnp oracle (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attn import flash_attention, flash_attention_ref
+
+RNG = np.random.default_rng(7)
+
+
+def _mk(b, sq, sk, h, d, dtype=np.float32):
+    q = jnp.asarray(RNG.standard_normal((b, sq, h, d)).astype(dtype))
+    k = jnp.asarray(RNG.standard_normal((b, sk, h, d)).astype(dtype))
+    v = jnp.asarray(RNG.standard_normal((b, sk, h, d)).astype(dtype))
+    return q, k, v
+
+
+@pytest.mark.parametrize("b,s,h,d,bq,bk", [
+    (2, 256, 2, 64, 128, 128),
+    (1, 128, 4, 32, 64, 64),
+    (2, 200, 1, 64, 128, 128),  # non-multiple seq (padding path)
+    (1, 384, 2, 128, 128, 64),  # asymmetric blocks
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_kernel_matches_ref(b, s, h, d, bq, bk, causal):
+    q, k, v = _mk(b, s, s, h, d)
+    out = flash_attention(q, k, v, causal=causal, bq=bq, bk=bk)
+    bh = b * h
+    qf = q.transpose(0, 2, 1, 3).reshape(bh, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(bh, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(bh, s, d)
+    ref = flash_attention_ref(qf, kf, vf, causal=causal)
+    ref = ref.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3)
+
+
+def test_flash_kernel_bf16():
+    q, k, v = _mk(1, 128, 128, 2, 64)
+    qb, kb, vb = (x.astype(jnp.bfloat16) for x in (q, k, v))
+    out = flash_attention(qb, kb, vb, causal=True)
+    ref = flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref), atol=3e-2
+    )
+
+
+def test_flash_kernel_cross_attention_lengths():
+    """sq != sk (decode-style / cross-attention) with padding."""
+    q, k, v = _mk(2, 64, 200, 2, 32)
+    out = flash_attention(q, k, v, causal=False, bq=64, bk=128)
+    bh = 4
+    qf = q.transpose(0, 2, 1, 3).reshape(bh, 64, 32)
+    kf = k.transpose(0, 2, 1, 3).reshape(bh, 200, 32)
+    vf = v.transpose(0, 2, 1, 3).reshape(bh, 200, 32)
+    ref = flash_attention_ref(qf, kf, vf, causal=False)
+    ref = ref.reshape(2, 2, 64, 32).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3)

@@ -1,0 +1,78 @@
+"""APCP/KCCP partition geometry properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.partition import (
+    ConvGeometry,
+    apcp_partition,
+    kccp_partition,
+    merge_output,
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    h=st.integers(6, 40),
+    w=st.integers(4, 20),
+    k_a=st.sampled_from([1, 2, 4, 8]),
+    kh=st.sampled_from([1, 3, 5]),
+    s=st.sampled_from([1, 2]),
+    p=st.sampled_from([0, 1, 2]),
+)
+def test_apcp_geometry(h, w, k_a, kh, s, p):
+    """Eq. (24)/(25): slice height/stride produce exactly H'/k_a rows each."""
+    if h + 2 * p < kh:
+        return
+    geo = ConvGeometry(2, 4, h, w, kh, kh if kh <= w + 2 * p else 1, s, p, k_a, 1)
+    if geo.kernel_w > geo.padded_w:
+        return
+    x = jnp.arange(2 * h * w, dtype=jnp.float32).reshape(2, h, w)
+    parts = apcp_partition(x, geo)
+    assert parts.shape == (k_a, 2, geo.h_hat, geo.padded_w)
+    # each slice convolves to exactly out_h_block rows
+    assert (geo.h_hat - geo.kernel_h) // geo.stride + 1 == geo.out_h_block
+    # slices tile the output: starts step by s_hat = out_h_block * stride
+    assert geo.s_hat == geo.out_h_block * geo.stride
+
+
+def test_apcp_slices_match_original_rows():
+    geo = ConvGeometry(1, 1, 10, 10, 3, 3, 1, 0, 2, 1)
+    x = jnp.arange(100, dtype=jnp.float32).reshape(1, 10, 10)
+    parts = apcp_partition(x, geo)
+    np.testing.assert_array_equal(np.asarray(parts[0][0]), np.asarray(x[0, : geo.h_hat]))
+    np.testing.assert_array_equal(
+        np.asarray(parts[1][0, : 10 - geo.s_hat]), np.asarray(x[0, geo.s_hat :])
+    )
+
+
+def test_kccp_partition_and_padding():
+    geo = ConvGeometry(3, 10, 8, 8, 3, 3, 1, 1, 1, 4)  # N=10 pads to 12
+    k = jnp.arange(10 * 3 * 9, dtype=jnp.float32).reshape(10, 3, 3, 3)
+    parts = kccp_partition(k, geo)
+    assert parts.shape == (4, 3, 3, 3, 3)
+    np.testing.assert_array_equal(np.asarray(parts[0]), np.asarray(k[:3]))
+    assert float(jnp.sum(parts[3, 2:])) == 0.0  # zero padding
+
+
+def test_merge_roundtrip():
+    geo = ConvGeometry(1, 6, 12, 5, 3, 3, 1, 1, 3, 2)
+    y = jnp.arange(
+        geo.out_c_padded * geo.out_h_padded * geo.out_w, dtype=jnp.float32
+    ).reshape(geo.out_c_padded, geo.out_h_padded, geo.out_w)
+    # split into blocks the same way workers produce them, then merge
+    blocks = []
+    for a in range(geo.k_a):
+        for b in range(geo.k_b):
+            blocks.append(
+                y[
+                    b * geo.out_c_block : (b + 1) * geo.out_c_block,
+                    a * geo.out_h_block : (a + 1) * geo.out_h_block,
+                ]
+            )
+    merged = merge_output(jnp.stack(blocks), geo)
+    np.testing.assert_array_equal(
+        np.asarray(merged), np.asarray(y[: geo.out_channels, : geo.out_h])
+    )

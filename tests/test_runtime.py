@@ -1,0 +1,56 @@
+"""Simulated cluster: straggler avoidance, failures, elastic recovery."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fcdcc import FcdccPlan
+from repro.core.partition import ConvGeometry, np_reference_conv
+from repro.runtime import ClusterDegraded, FcdccCluster, StragglerModel, run_layer_elastic
+
+RNG = np.random.default_rng(0)
+PLAN = FcdccPlan(n=6, k_a=2, k_b=4)
+GEO = ConvGeometry(3, 8, 12, 12, 3, 3, 1, 1, 2, 4)
+X = jnp.asarray(RNG.standard_normal((3, 12, 12)), jnp.float32)
+K = jnp.asarray(RNG.standard_normal((8, 3, 3, 3)), jnp.float32)
+REF = np_reference_conv(np.asarray(X), np.asarray(K), 1, 1)
+
+
+def test_simulated_avoids_stragglers():
+    cl = FcdccCluster(PLAN, StragglerModel.fixed(6, 2, 5.0), mode="simulated")
+    y, t = cl.run_layer(GEO, X, K)
+    np.testing.assert_allclose(np.asarray(y), REF, atol=1e-3)
+    assert t.compute_s < 1.0  # delta-th fastest, not the 5s stragglers
+    assert all(t.worker_compute_s[i] < 1.0 for i in t.used_workers)
+
+
+def test_threads_mode_returns_before_stragglers():
+    cl = FcdccCluster(PLAN, StragglerModel.fixed(6, 2, 0.5), mode="threads")
+    y, t = cl.run_layer(GEO, X, K)
+    np.testing.assert_allclose(np.asarray(y), REF, atol=1e-3)
+    assert t.compute_s < 0.4
+
+
+def test_dead_workers_within_gamma():
+    d = np.zeros(6)
+    d[[0, 1, 2, 3]] = np.inf  # 4 dead, gamma = 6 - 2 = 4
+    cl = FcdccCluster(PLAN, StragglerModel(d), mode="simulated")
+    y, _ = cl.run_layer(GEO, X, K)
+    np.testing.assert_allclose(np.asarray(y), REF, atol=1e-3)
+
+
+def test_degraded_raises_then_elastic_recovers():
+    d = np.zeros(6)
+    d[:5] = np.inf  # one survivor < delta=2
+    with pytest.raises(ClusterDegraded):
+        FcdccCluster(PLAN, StragglerModel(d), mode="simulated").run_layer(GEO, X, K)
+    y, _, plan2 = run_layer_elastic(PLAN, GEO, X, K, StragglerModel(d), mode="simulated")
+    np.testing.assert_allclose(np.asarray(y), REF, atol=1e-3)
+    assert plan2.delta <= 1  # shrank to a grid the survivor can cover
+
+
+def test_fused_worker_matches_loop():
+    a = FcdccCluster(PLAN, StragglerModel.none(6), mode="simulated")
+    y1, _ = a.run_layer(GEO, X, K)
+    layer_loop = FcdccCluster(PLAN, StragglerModel.none(6), mode="simulated")
+    y2, _ = layer_loop.run_layer(GEO, X, K)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)

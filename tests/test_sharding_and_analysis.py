@@ -1,0 +1,95 @@
+"""Sharding resolution rules + HLO cost analyzer correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.sharding import resolve_pspec
+
+MESH = {"data": 16, "model": 16}
+MESH3 = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_resolve_basic():
+    assert resolve_pspec((256, 4096), (("pod", "data"), None), MESH) == P("data", None)
+    assert resolve_pspec((256, 4096), (("pod", "data"), None), MESH3) == P(("pod", "data"), None)
+
+
+def test_resolve_divisibility_fallback():
+    # 9 heads don't divide model=16 -> replicate
+    assert resolve_pspec((30, 9, 64), (None, "model", None), MESH) == P(None, None, None)
+    # flattened 9*64=576 DOES divide -> shards
+    assert resolve_pspec((30, 576), (None, "model"), MESH) == P(None, "model")
+    # each mesh axis used at most once
+    assert resolve_pspec((32, 32), ("model", "model"), MESH) == P("model", None)
+
+
+def test_resolve_candidate_chain():
+    # first candidate fails (8 % 16), single-axis retry also fails -> None
+    assert resolve_pspec((8,), (("model",),), MESH) == P(None)
+
+
+def test_hlo_scan_trip_counts():
+    def f(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        c, _ = jax.lax.scan(body, x, w)
+        return c
+
+    x = jnp.ones((64, 64))
+    w = jnp.ones((8, 64, 64))
+    cost = analyze_hlo(jax.jit(f).lower(x, w).compile().as_text())
+    assert cost.dot_flops == 8 * 2 * 64**3
+
+
+def test_hlo_nested_scan():
+    def g(x, w):
+        def outer(cc, wi):
+            def inner(ci, _):
+                return jnp.tanh(ci @ wi), None
+            ci, _ = jax.lax.scan(inner, cc, None, length=4)
+            return ci, None
+        cc, _ = jax.lax.scan(outer, x, w)
+        return cc
+
+    x = jnp.ones((64, 64))
+    w = jnp.ones((8, 64, 64))
+    cost = analyze_hlo(jax.jit(g).lower(x, w).compile().as_text())
+    assert cost.dot_flops == 8 * 4 * 2 * 64**3
+
+
+def test_hlo_collective_accounting():
+    """Synthetic HLO string: ring factors for each collective type."""
+    hlo = """
+HloModule test, entry_computation_layout={()->f32[]}
+
+ENTRY %main (p: f32[128,8]) -> f32[128,8] {
+  %p = f32[128,8]{1,0} parameter(0)
+  %ar = f32[128,8]{1,0} all-reduce(%p), replica_groups=[1,4]<=[4], to_apply=%add
+  %ag = f32[512,8]{1,0} all-gather(%ar), replica_groups=[1,4]<=[4], dimensions={0}
+  ROOT %cp = f32[128,8]{1,0} collective-permute(%ar), source_target_pairs={{0,1}}
+}
+"""
+    c = analyze_hlo(hlo, 4)
+    sz = 128 * 8 * 4
+    assert np.isclose(c.collectives["all-reduce"], 2 * sz * 3 / 4)
+    assert np.isclose(c.collectives["all-gather"], 4 * sz * 3 / 4)
+    assert np.isclose(c.collectives["collective-permute"], sz)
+
+
+def test_dryrun_smoke_cell():
+    """One tiny dry-run cell end-to-end in a subprocess (256 fake devices)."""
+    import os
+    import subprocess
+    import sys
+
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "smollm-135m",
+         "--shape", "train_4k", "--smoke-scale", "16", "--force"],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": "src"},
+        timeout=560,
+    )
+    assert out.returncode == 0, out.stdout[-1500:] + out.stderr[-1500:]
+    assert "[ok" in out.stdout

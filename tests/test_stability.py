@@ -1,0 +1,56 @@
+"""Numerical-stability claims (paper Fig. 3/4) at test scale."""
+import numpy as np
+
+from repro.core.baselines import (
+    chebyshev_points,
+    make_poly_codes,
+    poly_recovery_matrix,
+    real_points,
+)
+from repro.core.crme import condition_number, make_axis_codes, recovery_matrix
+
+
+def _worst_cond(n, delta, maker, trials=20, seed=0):
+    rng = np.random.default_rng(seed)
+    worst = 0.0
+    for _ in range(trials):
+        sub = sorted(rng.choice(n, delta, replace=False).tolist())
+        worst = max(worst, maker(sub))
+    return worst
+
+
+def test_condition_number_ordering():
+    """CRME < Chebyshev < real-Vandermonde, paper Fig. 4 ordering."""
+    n, delta = 20, 16
+    a, b = make_axis_codes(2, 2 * delta, n)
+    crme = _worst_cond(n, delta, lambda s: condition_number(recovery_matrix(a, b, s)))
+    pa, pb = make_poly_codes(2, delta // 2, n, real_points(n))
+    vand = _worst_cond(n, delta, lambda s: np.linalg.cond(poly_recovery_matrix(pa, pb, s)))
+    ca, cb = make_poly_codes(2, delta // 2, n, chebyshev_points(n))
+    cheb = _worst_cond(n, delta, lambda s: np.linalg.cond(poly_recovery_matrix(ca, cb, s)))
+    assert crme < cheb < vand
+
+
+def test_crme_mse_tiny_in_float64():
+    """Paper Table III: MSE ~1e-27 scale decode error in f64."""
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+
+    from repro.core import CodedConv2d, ConvGeometry, FcdccPlan
+
+    rng = np.random.default_rng(0)
+    plan = FcdccPlan(n=20, k_a=2, k_b=32)
+    geo = ConvGeometry(8, 64, 24, 24, 3, 3, 1, 1, 2, 32)
+    layer = CodedConv2d(plan, geo)
+    x = jnp.asarray(rng.standard_normal((8, 24, 24)))
+    k = jnp.asarray(rng.standard_normal((64, 8, 3, 3)))
+    y = layer.run_simulated(x, k, list(range(4, 20)))
+    ref = jax.lax.conv_general_dilated(
+        x[None], k, (1, 1), ((1, 1), (1, 1)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+    mse = float(jnp.mean((y - ref) ** 2))
+    assert mse < 1e-20, mse
+    jax.config.update("jax_enable_x64", False)
