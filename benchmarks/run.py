@@ -15,6 +15,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sizes (slow)")
     ap.add_argument("--only", default=None, help="comma list: exp1..exp5,roofline")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="batch size for the coded-pipeline sections (exp1/exp4)")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -29,10 +31,10 @@ def main() -> None:
     )
 
     experiments = {
-        "exp1": exp1_naive_vs_fcdcc.run,
+        "exp1": lambda quick: exp1_naive_vs_fcdcc.run(quick, batch=args.batch),
         "exp2": exp2_stability.run,
         "exp3": exp3_scalability.run,
-        "exp4": exp4_stragglers.run,
+        "exp4": lambda quick: exp4_stragglers.run(quick, batch=args.batch),
         "exp5": exp5_partition_opt.run,
         "roofline": roofline_report.run,
     }

@@ -1,62 +1,67 @@
 """Coded CNN inference under stragglers (the paper's deployment story).
 
-Runs AlexNet's ConvLs through the simulated master/worker cluster with
-injected stragglers and a dead node, layer-wise optimal (k_A, k_B) from the
-cost model, and reports the per-layer timing breakdown.
+Compiles AlexNet's ConvL stack into a ``CodedPipeline`` — layer-wise optimal
+(k_A, k_B) from the cost model, every layer's filters encoded ONCE and
+resident on the workers — then streams a batch of images through the
+simulated master/worker cluster with injected stragglers and a dead node,
+reporting the per-layer timing breakdown of the batched steady-state run.
 
-  PYTHONPATH=src python examples/coded_cnn_inference.py
+  PYTHONPATH=src python examples/coded_cnn_inference.py [--batch 4]
 """
+import argparse
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cost import CostWeights, optimal_partition
+from repro.core.cost import CostWeights
 from repro.core.fcdcc import FcdccPlan
-from repro.models.cnn import CNN_SPECS, layer_geometry
+from repro.core.pipeline import CodedPipeline, plan_layers
+from repro.models.cnn import CNN_SPECS, init_cnn
 from repro.runtime import FcdccCluster, StragglerModel
 
 N_WORKERS = 12
 Q = 16  # subtasks -> delta = Q/4 = 4, gamma = 8
 W = CostWeights(comm=0.09, store=0.023, comp=0.0)
 
-rng = np.random.default_rng(0)
-hw0, layers = CNN_SPECS["alexnet"]
-hw0 = 113  # reduced spatial size for the CPU demo
 
-# 2 stragglers (+1s) and one dead worker; gamma covers all of them
-delays = np.zeros(N_WORKERS)
-delays[[1, 7]] = 1.0
-delays[3] = np.inf
-straggler = StragglerModel(delays)
+def main(batch: int = 4):
+    rng = np.random.default_rng(0)
+    _, layers = CNN_SPECS["alexnet"]
+    hw0 = 113  # reduced spatial size for the CPU demo
 
-hw = hw0
-x = jnp.asarray(rng.standard_normal((3, hw, hw)), jnp.float32)
-print(f"{N_WORKERS} workers, Q={Q} subtasks, 2 stragglers + 1 dead node\n")
-for layer in layers:
-    geo0 = layer_geometry(layer, hw)
-    (k_a, k_b), cost, _ = optimal_partition(geo0, Q, W)
-    if layer.out_ch % k_b:
-        k_a, k_b = 2, Q // 2
-    plan = FcdccPlan(n=N_WORKERS, k_a=k_a, k_b=k_b)
-    geo = layer_geometry(layer, hw, k_a, k_b)
-    k = jnp.asarray(
-        rng.standard_normal((layer.out_ch, layer.in_ch, layer.kernel, layer.kernel))
-        * (layer.in_ch * layer.kernel**2) ** -0.5,
-        jnp.float32,
-    )
-    cluster = FcdccCluster(plan, straggler, mode="simulated")
-    y, t = cluster.run_layer(geo, x, k)
-    print(
-        f"{layer.name:6s} (k_A,k_B)=({k_a:2d},{k_b:2d}) "
-        f"encode {t.encode_s*1e3:6.1f} ms  compute {t.compute_s*1e3:6.1f} ms "
-        f"decode {t.decode_s*1e3:6.1f} ms  used workers {t.used_workers}"
-    )
-    hw = geo.out_h // layer.pool if layer.pool > 1 else geo.out_h
-    x = jnp.maximum(y, 0.0)[:, :hw, :hw] if layer.pool == 1 else jnp.max(
-        jnp.maximum(y, 0.0)[:, : geo.out_h - geo.out_h % layer.pool,
-                            : geo.out_w - geo.out_w % layer.pool]
-        .reshape(layer.out_ch, geo.out_h // layer.pool, layer.pool,
-                 geo.out_w // layer.pool, layer.pool)
-        , axis=(2, 4),
-    )
-    hw = x.shape[1]
-print("\ninference completed despite stragglers and a dead node.")
+    # 2 stragglers (+1s) and one dead worker; gamma covers all of them
+    delays = np.zeros(N_WORKERS)
+    delays[[1, 7]] = 1.0
+    delays[3] = np.inf
+    straggler = StragglerModel(delays)
+
+    params = init_cnn("alexnet", jax.random.PRNGKey(0))
+
+    # compile once: per-layer cost-optimal (k_A, k_B), filters encoded once
+    specs = plan_layers(layers, hw0, N_WORKERS, q=Q, weights=W)
+    pipeline = CodedPipeline(specs, params)
+    assert pipeline.filter_encode_calls == len(layers)  # encode-once contract
+
+    cluster = FcdccCluster(FcdccPlan(n=N_WORKERS, k_a=2, k_b=Q // 2),
+                           straggler, mode="simulated")
+    cluster.load_pipeline(pipeline)
+
+    x = jnp.asarray(rng.standard_normal((batch, 3, hw0, hw0)), jnp.float32)
+    print(f"{N_WORKERS} workers, Q={Q} subtasks, batch={batch}, "
+          f"2 stragglers + 1 dead node\n")
+    y, timings = cluster.run_pipeline(x)
+    for spec, t in zip(pipeline.specs, timings):
+        print(
+            f"{spec.name:6s} (k_A,k_B)=({spec.plan.k_a:2d},{spec.plan.k_b:2d}) "
+            f"encode {t.encode_s*1e3:6.1f} ms  compute {t.compute_s*1e3:6.1f} ms "
+            f"decode {t.decode_s*1e3:6.1f} ms  used workers {t.used_workers}"
+        )
+    print(f"\noutput {tuple(y.shape)}; batched inference completed despite "
+          f"stragglers and a dead node.")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    main(**vars(ap.parse_args()))

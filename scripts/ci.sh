@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Fast CI suite: the ROADMAP tier-1 verify command with slow (VGG-sized)
+# cases deselected.  Extra args are passed through to pytest.
+#
+#   scripts/ci.sh            # fast suite
+#   scripts/ci.sh -m ""      # include slow cases too
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q -m "not slow" "$@"

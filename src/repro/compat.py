@@ -1,0 +1,121 @@
+"""jax version-compat shims.
+
+The substrate targets the modern mesh API (``jax.make_mesh(axis_types=...)``,
+``jax.set_mesh``, ``jax.sharding.AxisType``, ``jax.sharding.get_abstract_mesh``)
+but must also run on jax 0.4.x, where none of those exist.  This module
+provides call-site helpers (``make_mesh`` / ``set_mesh``) and an ``install()``
+that grafts the missing attributes onto ``jax`` itself so that *test code and
+subprocesses written against the new API* run unchanged on 0.4.x.
+
+Nothing here touches device state: importing jax does not initialise a
+backend, so the dry-run's XLA_FLAGS dance keeps working.
+
+``install()`` is idempotent and a no-op on jax versions that already ship
+the real APIs; it runs once at ``import repro``.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+
+import jax
+import jax.sharding
+
+
+class _AxisTypeFallback(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` on jax 0.4.x.
+
+    Old jax has no sharding-in-types, so every axis behaves as Auto; the enum
+    only exists so call sites passing ``axis_types=(AxisType.Auto,) * k``
+    type-check and hash.
+    """
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+# captured before install() may rebind jax.make_mesh to our wrapper
+_ORIG_MAKE_MESH = getattr(jax, "make_mesh", None)
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` that tolerates ``axis_types`` on jax 0.4.x (and
+    falls back to a device-grid ``Mesh`` on versions predating make_mesh)."""
+    if _ORIG_MAKE_MESH is None:  # < 0.4.35
+        import numpy as _np
+
+        devs = devices if devices is not None else jax.devices()
+        grid = _np.asarray(devs).reshape(axis_shapes)
+        return jax.sharding.Mesh(grid, axis_names)
+    try:
+        return _ORIG_MAKE_MESH(
+            axis_shapes, axis_names, axis_types=axis_types, devices=devices
+        )
+    except TypeError:  # 0.4.x: no axis_types kwarg
+        return _ORIG_MAKE_MESH(axis_shapes, axis_names, devices=devices)
+
+
+def set_mesh(mesh):
+    """Context manager equivalent of ``jax.set_mesh``.
+
+    On new jax this defers to the real thing; on 0.4.x a ``Mesh`` is itself a
+    context manager that installs the thread-local resource env, which is
+    what ``with_sharding_constraint`` with a bare ``PartitionSpec`` (and our
+    ``shard_hint``) consult at trace time.
+    """
+    real = getattr(jax, "set_mesh", None)
+    if real is not None and real is not set_mesh:
+        return real(mesh)
+    return _mesh_context(mesh)
+
+
+@contextlib.contextmanager
+def _mesh_context(mesh):
+    with mesh:
+        yield mesh
+
+
+def get_abstract_mesh():
+    """The mesh active in the current context (``.empty`` when none is)."""
+    real = getattr(jax.sharding, "get_abstract_mesh", None)
+    if real is not None and real is not get_abstract_mesh:
+        return real()
+    from jax._src import mesh as mesh_lib
+
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a dict on both jax lines.
+
+    jax 0.4.x returns a one-element list of per-device dicts; newer jax
+    returns the dict directly.
+    """
+    c = compiled.cost_analysis()
+    if isinstance(c, (list, tuple)):
+        return c[0] if c else {}
+    return c
+
+
+def install() -> None:
+    """Graft missing new-API attributes onto ``jax`` (0.4.x only)."""
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisTypeFallback
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = set_mesh
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        jax.sharding.get_abstract_mesh = get_abstract_mesh
+    # late-0.4.x make_mesh exists but rejects axis_types (and pre-0.4.35 has
+    # no make_mesh at all); replace with the tolerant wrapper so new-API call
+    # sites (including test subprocesses) work verbatim.
+    import inspect
+
+    try:
+        params = (
+            inspect.signature(_ORIG_MAKE_MESH).parameters if _ORIG_MAKE_MESH else {}
+        )
+    except (TypeError, ValueError):  # pragma: no cover - exotic builds
+        params = {}
+    if "axis_types" not in params:
+        jax.make_mesh = make_mesh

@@ -11,3 +11,9 @@ from .crme import (
 from .partition import ConvGeometry, apcp_partition, kccp_partition, merge_output
 from .fcdcc import CodedConv2d, FcdccPlan
 from .cost import CostWeights, cost_breakdown, optimal_partition
+from .pipeline import (
+    CodedLayerSpec,
+    CodedPipeline,
+    build_cnn_pipeline,
+    plan_layers,
+)

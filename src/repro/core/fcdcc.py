@@ -13,6 +13,12 @@ Two execution paths share the same math:
     computes its coded subtask, coded outputs are all-gathered (they are
     Q/n-sized each, so this is the paper's "download" phase as an ICI
     collective) and decoded identically on every shard.
+
+Both paths are batch-native: ``x`` may be ``(C, H, W)`` or ``(B, C, H, W)``;
+a whole batch flows through one coded program (the batch rides inside each
+worker's subtask, so the code/decode algebra is unchanged).  This is what
+``repro.core.pipeline.CodedPipeline`` builds on to stream multi-layer CNNs
+through a persistent coded cluster.
 """
 from __future__ import annotations
 
@@ -71,19 +77,22 @@ class FcdccPlan:
 
 
 def _conv_valid(x, k, stride, backend="lax"):
-    """VALID conv of one coded block pair: x (C,H,W) * k (N,C,KH,KW)."""
+    """VALID conv of one coded block pair: x ([B,]C,H,W) * k (N,C,KH,KW)."""
+    batched = x.ndim == 4
     if backend == "pallas":
         from repro.kernels.conv2d.ops import conv2d_im2col
 
+        if batched:
+            return jax.vmap(lambda xi: conv2d_im2col(xi, k, stride))(x)
         return conv2d_im2col(x, k, stride)
     y = jax.lax.conv_general_dilated(
-        x[None],
+        x if batched else x[None],
         k,
         window_strides=(stride, stride),
         padding="VALID",
         dimension_numbers=("NCHW", "OIHW", "NCHW"),
     )
-    return y[0]
+    return y if batched else y[0]
 
 
 class CodedConv2d:
@@ -103,16 +112,28 @@ class CodedConv2d:
         self.backend = backend
         self.fused_worker = fused_worker
         self.a_code, self.b_code = plan.codes
+        # instrumentation: CodedPipeline/tests assert encode-once semantics
+        self.filter_encode_calls = 0
+        self.input_encode_calls = 0
 
     # -- master side: encode ---------------------------------------------
-    def encode_inputs(self, x: jnp.ndarray) -> jnp.ndarray:
-        """(C,H,W) -> coded inputs (n, ell_a, C, h_hat, W+2p)."""
+    def encode_inputs(self, x: jnp.ndarray, matrix=None) -> jnp.ndarray:
+        """([B,]C,H,W) -> coded inputs (n, ell_a, [B,] C, h_hat, W+2p).
+
+        ``matrix`` overrides the A-code encoding matrix — pass a column
+        subset (``(k_a, ell_a*m)``, possibly a traced array) to encode only
+        m selected workers' shares instead of all n.
+        """
+        self.input_encode_calls += 1
         parts = apcp_partition(x, self.geo)
-        coded = encode_tensor_list(parts, self.a_code.matrix)
+        coded = encode_tensor_list(
+            parts, self.a_code.matrix if matrix is None else matrix
+        )
         return group_by_worker(coded, self.a_code.ell)
 
     def encode_filters(self, k: jnp.ndarray) -> jnp.ndarray:
         """(N,C,KH,KW) -> coded filters (n, ell_b, N/k_b, C, KH, KW)."""
+        self.filter_encode_calls += 1
         parts = kccp_partition(k, self.geo)
         coded = encode_tensor_list(parts, self.b_code.matrix)
         return group_by_worker(coded, self.b_code.ell)
@@ -121,14 +142,14 @@ class CodedConv2d:
     def worker_compute(self, xe_i: jnp.ndarray, ke_i: jnp.ndarray) -> jnp.ndarray:
         """Coded subtask of one worker (Algorithm 4 lines 6-11).
 
-        ``xe_i``: (ell_a, C, h_hat, Wp); ``ke_i``: (ell_b, N/k_b, C, KH, KW).
-        Returns (ell_a*ell_b, N/k_b, H'/k_a, W'), slot ``ell_b*b1 + b2``.
+        ``xe_i``: (ell_a, [B,] C, h_hat, Wp); ``ke_i``: (ell_b, N/k_b, C, KH, KW).
+        Returns (ell_a*ell_b, [B,] N/k_b, H'/k_a, W'), slot ``ell_b*b1 + b2``.
 
         §Perf (beyond paper): the ell_a*ell_b pairwise convolutions are
-        fused into ONE batched conv — coded inputs as the batch dim, coded
-        filters concatenated along output channels — a single bigger GEMM
-        instead of 4 small ones (set ``fused_worker=False`` for the
-        paper-literal loop).
+        fused into ONE batched conv — coded inputs (x the request batch) as
+        the batch dim, coded filters concatenated along output channels — a
+        single bigger GEMM instead of 4 small ones (set ``fused_worker=False``
+        for the paper-literal loop).
         """
         if not self.fused_worker or self.backend == "pallas":
             outs = []
@@ -141,25 +162,39 @@ class CodedConv2d:
         ea, eb = self.plan.ell_a, self.plan.ell_b
         nb = ke_i.shape[1]
         k_cat = ke_i.reshape((eb * nb,) + ke_i.shape[2:])
+        batched = xe_i.ndim == 5
+        b = xe_i.shape[1] if batched else 1
+        xin = xe_i.reshape((ea * b,) + xe_i.shape[-3:]) if batched else xe_i
         y = jax.lax.conv_general_dilated(
-            xe_i,
+            xin,
             k_cat,
             window_strides=(self.geo.stride, self.geo.stride),
             padding="VALID",
             dimension_numbers=("NCHW", "OIHW", "NCHW"),
-        )  # (ell_a, ell_b*nb, H', W')
-        return y.reshape((ea * eb, nb) + y.shape[2:])
+        )  # (ell_a[*B], ell_b*nb, H', W')
+        if not batched:
+            return y.reshape((ea * eb, nb) + y.shape[2:])
+        y = y.reshape((ea, b, eb, nb) + y.shape[2:])
+        return jnp.transpose(y, (0, 2, 1, 3, 4, 5)).reshape(
+            (ea * eb, b, nb) + y.shape[4:]
+        )
 
     # -- master side: decode ------------------------------------------------
     def decode(self, worker_ids, outputs: jnp.ndarray) -> jnp.ndarray:
-        """Any-delta decode + merge. ``outputs``: (delta, ell2, *block)."""
+        """Any-delta decode + merge.
+
+        ``outputs``: (delta, ell2, *block) where block is
+        ``([B,] N/k_b, H'/k_a, W')`` — the batch dim (if any) just rides
+        inside the decoded rows.
+        """
         blocks = decode_blocks(
             self.a_code,
             self.b_code,
             worker_ids,
             outputs,
-            block_output_shape(self.geo),
+            outputs.shape[2:],
         )
+        assert blocks.shape[-3:] == block_output_shape(self.geo)
         return merge_output(blocks, self.geo)
 
     # -- end-to-end paths ----------------------------------------------------
@@ -198,11 +233,11 @@ class CodedConv2d:
             # xe_s: (1, ell_a, ...) local slice
             out = self.worker_compute(xe_s[0], ke_s[0])[None]  # (1, ell2, ...)
             allout = jax.lax.all_gather(out, axis, axis=0, tiled=True)
-            coded = allout[sel]  # (delta, ell2, *block)
+            coded = allout[sel]  # (delta, ell2, *block) — block may be batched
             rows = coded.reshape(self.plan.k_a * self.plan.k_b, -1)
             true_rows = d.astype(rows.dtype) @ rows
             blocks = true_rows.reshape(
-                (self.plan.k_a * self.plan.k_b,) + block_output_shape(self.geo)
+                (self.plan.k_a * self.plan.k_b,) + coded.shape[2:]
             )
             return merge_output(blocks, self.geo)
 

@@ -2,6 +2,11 @@
 
 Pure shape algebra + slicing; the coding lives in ``nsctc.py``.  Everything
 here is jit-safe (static shapes derived from a ``ConvGeometry``).
+
+``apcp_partition`` and ``merge_output`` are batch-native: inputs may carry a
+leading batch dimension (``(B, C, H, W)`` / blocks ``(Q, B, N/k_b, ., .)``)
+so a whole request batch streams through one coded program — the single-image
+``(C, H, W)`` form keeps working unchanged.
 """
 from __future__ import annotations
 
@@ -81,21 +86,23 @@ class ConvGeometry:
 def apcp_partition(x: jnp.ndarray, geo: ConvGeometry) -> jnp.ndarray:
     """Adaptive-Padding Partitioning (Algorithm 2, lines 1-8).
 
-    ``x``: un-padded input ``(C, H, W)``.  Applies the layer's conv padding
-    plus the bottom zero-pad that rounds H' up to a multiple of ``k_a``, then
-    slices ``k_a`` overlapping subtensors of height ``h_hat`` at stride
-    ``s_hat``.  Returns ``(k_a, C, h_hat, W + 2p)``.
+    ``x``: un-padded input ``(C, H, W)`` or batched ``(B, C, H, W)``.
+    Applies the layer's conv padding plus the bottom zero-pad that rounds H'
+    up to a multiple of ``k_a``, then slices ``k_a`` overlapping subtensors
+    of height ``h_hat`` at stride ``s_hat``.  Returns
+    ``(k_a, [B,] C, h_hat, W + 2p)``.
     """
-    c, h, w = x.shape
+    c, h, w = x.shape[-3:]
     assert (c, h, w) == (geo.in_channels, geo.height, geo.width), (
         (c, h, w),
         geo,
     )
     p = geo.padding
     bottom = max(geo.in_h_needed - (h + 2 * p), 0)
-    x = jnp.pad(x, ((0, 0), (p, p + bottom), (p, p)))
+    pad = ((0, 0),) * (x.ndim - 2) + ((p, p + bottom), (p, p))
+    x = jnp.pad(x, pad)
     parts = [
-        x[:, i * geo.s_hat : i * geo.s_hat + geo.h_hat, :]
+        x[..., i * geo.s_hat : i * geo.s_hat + geo.h_hat, :]
         for i in range(geo.k_a)
     ]
     return jnp.stack(parts, axis=0)
@@ -123,20 +130,34 @@ def kccp_partition(k: jnp.ndarray, geo: ConvGeometry) -> jnp.ndarray:
 def merge_output(blocks: jnp.ndarray, geo: ConvGeometry) -> jnp.ndarray:
     """Assemble decoded blocks into Y (Algorithm 5, steps 5-6).
 
-    ``blocks``: ``(k_a*k_b, N/k_b, H'/k_a, W')`` ordered A-major
+    ``blocks``: ``(k_a*k_b, [B,] N/k_b, H'/k_a, W')`` ordered A-major
     (``index = a * k_b + b``, matching the T_C layout of eq. 13).
-    Returns ``(N, H', W')`` with channel/height padding stripped.
+    Returns ``([B,] N, H', W')`` with channel/height padding stripped.
     """
     q = geo.k_a * geo.k_b
-    assert blocks.shape == (q, geo.out_c_block, geo.out_h_block, geo.out_w)
+    assert blocks.shape[0] == q and blocks.shape[-3:] == (
+        geo.out_c_block,
+        geo.out_h_block,
+        geo.out_w,
+    ), (blocks.shape, geo)
+    if blocks.ndim == 4:
+        grid = blocks.reshape(
+            geo.k_a, geo.k_b, geo.out_c_block, geo.out_h_block, geo.out_w
+        )
+        # -> (k_b, N/k_b, k_a, H'/k_a, W') -> (N_padded, H'_padded, W')
+        y = jnp.transpose(grid, (1, 2, 0, 3, 4)).reshape(
+            geo.out_c_padded, geo.out_h_padded, geo.out_w
+        )
+        return y[: geo.out_channels, : geo.out_h, :]
+    b = blocks.shape[1]
     grid = blocks.reshape(
-        geo.k_a, geo.k_b, geo.out_c_block, geo.out_h_block, geo.out_w
+        geo.k_a, geo.k_b, b, geo.out_c_block, geo.out_h_block, geo.out_w
     )
-    # -> (k_b, N/k_b, k_a, H'/k_a, W') -> (N_padded, H'_padded, W')
-    y = jnp.transpose(grid, (1, 2, 0, 3, 4)).reshape(
-        geo.out_c_padded, geo.out_h_padded, geo.out_w
+    # -> (B, k_b, N/k_b, k_a, H'/k_a, W') -> (B, N_padded, H'_padded, W')
+    y = jnp.transpose(grid, (2, 1, 3, 0, 4, 5)).reshape(
+        b, geo.out_c_padded, geo.out_h_padded, geo.out_w
     )
-    return y[: geo.out_channels, : geo.out_h, :]
+    return y[:, : geo.out_channels, : geo.out_h, :]
 
 
 def block_output_shape(geo: ConvGeometry) -> tuple[int, int, int]:

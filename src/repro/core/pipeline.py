@@ -1,0 +1,340 @@
+"""Batched multi-layer coded inference engine: the ``CodedPipeline``.
+
+The paper's deployment model (Sec. IV, Fig. 1) pre-stores coded filters on
+the workers and streams a whole CNN's ConvL stack through the coded cluster.
+This module is that *system* view, versus the per-layer kernel view of
+``fcdcc.py``:
+
+  * ``plan_layers``        — compile a ConvL stack (LeNet-5 / AlexNet /
+    VGG-16 descriptors from ``repro.models.cnn``) into ``CodedLayerSpec``s,
+    choosing per-layer ``(k_a, k_b)`` via the Sec. IV-E cost model
+    (``cost.optimal_partition``) unless pinned by the caller.
+  * ``CodedPipeline``      — encodes **every** layer's filters exactly once
+    at construction (the resident-coded-filter store), caches one jitted
+    worker program per distinct worker-program signature, and executes
+    decode -> relu -> pool -> re-encode between layers for batched
+    ``(B, C, H, W)`` inputs.
+
+Amortization is the point: the seed path rebuilt ``CodedConv2d`` — and
+re-encoded filters and re-jitted the worker program — for every layer of
+every image.  A ``CodedPipeline`` pays encode+jit once and serves batches at
+steady state; ``repro.runtime.FcdccCluster.run_pipeline`` drives the same
+specs through the straggler-simulating master/worker runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .cost import CostWeights, optimal_partition
+from .crme import recovery_matrix
+from .fcdcc import CodedConv2d, FcdccPlan
+from .partition import ConvGeometry, merge_output
+
+__all__ = [
+    "CodedLayerSpec",
+    "CodedPipeline",
+    "plan_layers",
+    "build_cnn_pipeline",
+    "relu_pool",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CodedLayerSpec:
+    """One compiled ConvL of a coded pipeline (static plan + geometry)."""
+
+    name: str
+    plan: FcdccPlan
+    geo: ConvGeometry
+    pool: int = 1  # max-pool factor applied after relu
+
+    @property
+    def out_hw(self) -> int:
+        """Spatial size seen by the next layer (after pooling)."""
+        return self.geo.out_h // self.pool if self.pool > 1 else self.geo.out_h
+
+    @property
+    def program_key(self) -> tuple:
+        """Worker-program signature: layers sharing it share one jitted
+        program (shape specialization is jit's job)."""
+        return (
+            self.plan.ell_a,
+            self.plan.ell_b,
+            self.geo.stride,
+        )
+
+
+def relu_pool(y: jnp.ndarray, pool: int) -> jnp.ndarray:
+    """ReLU then ``pool x pool`` max-pool on the trailing (H, W) dims."""
+    y = jax.nn.relu(y)
+    if pool == 1:
+        return y
+    h, w = y.shape[-2:]
+    h2, w2 = h - h % pool, w - w % pool
+    y = y[..., :h2, :w2]
+    return jnp.max(
+        y.reshape(y.shape[:-2] + (h2 // pool, pool, w2 // pool, pool)),
+        axis=(-3, -1),
+    )
+
+
+def _choose_kab(geo0: ConvGeometry, q: int, n: int, weights: CostWeights):
+    """Cost-optimal feasible (k_a, k_b) with k_a*k_b = q and delta <= n."""
+    _, _, landscape = optimal_partition(geo0, q, weights)
+    for kab, _cost in sorted(landscape.items(), key=lambda kv: kv[1]):
+        try:
+            FcdccPlan(n=n, k_a=kab[0], k_b=kab[1])
+        except ValueError:
+            continue
+        return kab
+    raise ValueError(f"no feasible (k_a, k_b) for q={q} on n={n} workers")
+
+
+def plan_layers(
+    layers: Iterable,
+    input_hw: int,
+    n: int,
+    *,
+    q: int | None = None,
+    default_kab: tuple[int, int] | None = None,
+    per_layer_kab: dict | None = None,
+    weights: CostWeights = CostWeights(),
+) -> list[CodedLayerSpec]:
+    """Compile a ConvL stack into per-layer coded specs.
+
+    ``layers``: descriptors with ``name/in_ch/out_ch/kernel/stride/padding/
+    pool`` attributes (``repro.models.cnn.ConvL`` or compatible).  The
+    (k_a, k_b) of each layer comes from, in priority order:
+    ``per_layer_kab[name]``, then ``default_kab``, then the cost-optimal
+    feasible split of the ``q``-subtask budget (Sec. IV-E) — at least one of
+    ``q`` / ``default_kab`` must be given.
+    """
+    if q is None and default_kab is None:
+        raise ValueError("need q (subtask budget) or default_kab")
+    specs = []
+    hw = input_hw
+    for layer in layers:
+        geo0 = ConvGeometry(
+            in_channels=layer.in_ch,
+            out_channels=layer.out_ch,
+            height=hw,
+            width=hw,
+            kernel_h=layer.kernel,
+            kernel_w=layer.kernel,
+            stride=layer.stride,
+            padding=layer.padding,
+        )
+        kab = (per_layer_kab or {}).get(layer.name, default_kab)
+        if kab is None:
+            kab = _choose_kab(geo0, q, n, weights)
+        k_a, k_b = kab
+        plan = FcdccPlan(n=n, k_a=k_a, k_b=k_b)
+        geo = dataclasses.replace(geo0, k_a=k_a, k_b=k_b)
+        spec = CodedLayerSpec(layer.name, plan, geo, getattr(layer, "pool", 1))
+        specs.append(spec)
+        hw = spec.out_hw
+    return specs
+
+
+class CodedPipeline:
+    """A whole CNN ConvL stack compiled against one coded cluster.
+
+    Construction encodes every layer's filters exactly once (asserted by
+    ``filter_encode_calls``); running feeds a ``(B, C, H, W)`` batch through
+    encode -> coded worker convs -> decode -> relu -> pool per layer.  The
+    per-worker view of the same specs/filters is consumed by
+    ``repro.runtime.FcdccCluster`` (resident coded filters + straggler
+    simulation); this class is the single-process mathematical engine.
+    """
+
+    def __init__(self, specs: Sequence[CodedLayerSpec], params: dict, *,
+                 backend: str = "lax", fused_worker: bool = True):
+        specs = list(specs)
+        if not specs:
+            raise ValueError("empty pipeline")
+        ns = {s.plan.n for s in specs}
+        if len(ns) != 1:
+            raise ValueError(f"all layers must target the same cluster, got n={ns}")
+        self.specs = specs
+        self.n = ns.pop()
+        self.backend = backend
+        self.layers = [
+            CodedConv2d(s.plan, s.geo, backend=backend, fused_worker=fused_worker)
+            for s in specs
+        ]
+        # resident coded filters: encoded exactly once, reused every run
+        self.coded_filters = [
+            layer.encode_filters(jnp.asarray(params[s.name]))
+            for s, layer in zip(specs, self.layers)
+        ]
+        self.input_encode_calls = 0
+        # program caches -------------------------------------------------
+        self._encoders: dict[int, callable] = {}
+        self._cluster_programs: dict[tuple, callable] = {}  # per-worker call
+        self._batch_programs: dict[tuple, callable] = {}  # vmapped over workers
+        self._decoders: dict[int, callable] = {}  # one per layer, any subset
+        self._decode_mats: dict[tuple, np.ndarray] = {}  # tiny QxQ inverses
+        self._encode_cols: dict[tuple, np.ndarray] = {}  # sliced A-code cols
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def filter_encode_calls(self) -> int:
+        """Total ``encode_filters`` invocations across layers (== number of
+        layers when the encode-once contract holds)."""
+        return sum(layer.filter_encode_calls for layer in self.layers)
+
+    @property
+    def num_worker_programs(self) -> int:
+        """Distinct jitted worker programs in use (<= number of layers)."""
+        return len(self._batch_programs) or len(self._cluster_programs)
+
+    def layer_delta(self, idx: int) -> int:
+        return self.specs[idx].plan.delta
+
+    # -- program caches ----------------------------------------------------
+    def encoder(self, idx: int):
+        """Jitted APCP+encode program for layer ``idx`` (the layer's own
+        ``encode_inputs``; its call counter only ticks at trace time — the
+        pipeline counts real invocations in ``input_encode_calls``)."""
+        fn = self._encoders.get(idx)
+        if fn is None:
+            fn = self._encoders[idx] = jax.jit(self.layers[idx].encode_inputs)
+        return fn
+
+    def worker_program(self, idx: int, *, over_workers: bool = True):
+        """The jitted coded worker program for layer ``idx``.
+
+        ``over_workers=True`` gives the vmapped-over-the-worker-axis program
+        (the single-process path); ``False`` gives the one-worker program the
+        threaded cluster dispatches per worker.  Layers with the same
+        ``program_key`` share one program — jit's shape cache handles the
+        per-geometry specialization, so e.g. VGG-16's thirteen ConvLs run on
+        a handful of compiled programs.
+        """
+        cache = self._batch_programs if over_workers else self._cluster_programs
+        key = self.specs[idx].program_key
+        fn = cache.get(key)
+        if fn is None:
+            compute = self.layers[idx].worker_compute
+            fn = cache[key] = jax.jit(
+                jax.vmap(compute) if over_workers else compute
+            )
+        return fn
+
+    def encode_columns(self, idx: int, worker_ids: tuple[int, ...]) -> np.ndarray:
+        """The A-code encoding columns of the selected workers — encoding
+        with this slice produces only those workers' coded input shares
+        ((n - delta)/n of the encode GEMM skipped versus full-n)."""
+        key = (self.specs[idx], worker_ids)
+        m = self._encode_cols.get(key)
+        if m is None:
+            code = self.layers[idx].a_code
+            m = self._encode_cols[key] = np.concatenate(
+                [code.worker_columns(i) for i in worker_ids], axis=1
+            )
+        return m
+
+    def decode_matrix(self, idx: int, worker_ids: tuple[int, ...]) -> np.ndarray:
+        """The QxQ decode inverse for layer ``idx`` under the given
+        surviving-worker subset (host-side float64, cached — it is tiny, so
+        caching per subset is cheap, unlike caching compiled programs)."""
+        key = (self.specs[idx], worker_ids)
+        d = self._decode_mats.get(key)
+        if d is None:
+            layer = self.layers[idx]
+            e = recovery_matrix(layer.a_code, layer.b_code, list(worker_ids))
+            d = self._decode_mats[key] = np.linalg.inv(e.T)
+        return d
+
+    def decoder(self, idx: int, worker_ids: tuple[int, ...]):
+        """Decode+merge+relu+pool for layer ``idx`` under the given
+        surviving-worker subset.
+
+        One jitted program per layer: the decode inverse is a *runtime
+        argument* (constant (Q, Q) shape), so the timing-dependent
+        fastest-delta subsets chosen by the cluster never trigger a
+        recompile or grow the program cache.  Returns ``fn(outs)``.
+        """
+        spec = self.specs[idx]
+        fn = self._decoders.get(idx)
+        if fn is None:
+            q = spec.plan.k_a * spec.plan.k_b
+
+            def dec(outs, d, _q=q, _geo=spec.geo, _pool=spec.pool):
+                rows = outs.reshape(outs.shape[0] * outs.shape[1], -1)
+                true_rows = d.astype(rows.dtype) @ rows
+                blocks = true_rows.reshape((_q,) + outs.shape[2:])
+                return relu_pool(merge_output(blocks, _geo), _pool)
+
+            fn = self._decoders[idx] = jax.jit(dec)
+        d = jnp.asarray(self.decode_matrix(idx, worker_ids))
+        return lambda outs: fn(outs, d)
+
+    # -- execution ---------------------------------------------------------
+    def layer_worker_ids(self, idx: int, worker_ids=None) -> tuple[int, ...]:
+        """The survivors layer ``idx`` decodes from: the first delta of the
+        available workers (all n when ``worker_ids`` is None)."""
+        delta = self.layer_delta(idx)
+        avail = list(range(self.n)) if worker_ids is None else list(worker_ids)
+        if len(avail) < delta:
+            raise ValueError(
+                f"layer {self.specs[idx].name} needs delta={delta} workers, "
+                f"got {len(avail)}"
+            )
+        return tuple(avail[:delta])
+
+    def run(self, x: jnp.ndarray, worker_ids=None) -> jnp.ndarray:
+        """Coded inference of the whole ConvL stack.
+
+        ``x``: ``(B, C, H, W)`` batch or a single ``(C, H, W)`` image.
+        ``worker_ids``: the available workers (any >= delta subset of n per
+        layer decodes to the same output); default all n.
+        """
+        squeeze = x.ndim == 3
+        if squeeze:
+            x = x[None]
+        for idx, layer in enumerate(self.layers):
+            ids = self.layer_worker_ids(idx, worker_ids)
+            self.input_encode_calls += 1
+            # encode only the selected workers' shares (matrix is a runtime
+            # argument, so any subset reuses the one per-layer program)
+            m_sel = jnp.asarray(self.encode_columns(idx, ids))
+            xe = self.encoder(idx)(x, m_sel)
+            sel = jnp.asarray(ids)
+            outs = self.worker_program(idx)(xe, self.coded_filters[idx][sel])
+            x = self.decoder(idx, ids)(outs)
+        return x[0] if squeeze else x
+
+
+def build_cnn_pipeline(
+    name: str,
+    params: dict,
+    n: int,
+    *,
+    q: int | None = None,
+    default_kab: tuple[int, int] | None = None,
+    per_layer_kab: dict | None = None,
+    input_hw: int | None = None,
+    weights: CostWeights = CostWeights(),
+    backend: str = "lax",
+) -> CodedPipeline:
+    """Compile one of the named CNNs (``lenet5``/``alexnet``/``vgg16``) into
+    a ``CodedPipeline`` (lazy model import keeps core free of model deps)."""
+    from repro.models.cnn import CNN_SPECS
+
+    hw0, layers = CNN_SPECS[name]
+    specs = plan_layers(
+        layers,
+        input_hw if input_hw is not None else hw0,
+        n,
+        q=q,
+        default_kab=default_kab,
+        per_layer_kab=per_layer_kab,
+        weights=weights,
+    )
+    return CodedPipeline(specs, params, backend=backend)

@@ -29,6 +29,7 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
+from repro import compat
 from repro.configs import ARCH_IDS, get_bundle  # noqa: E402
 from repro.configs.shapes import SHAPES, batch_structs  # noqa: E402
 from repro.launch import steps as steps_mod  # noqa: E402
@@ -69,7 +70,7 @@ def lower_cell(arch: str, shape: str, mesh, *, smoke_scale=None, extra=None):
     batch, cache = batch_structs(bundle, shape, smoke_scale=smoke_scale)
     params = bundle.param_shapes(jnp.bfloat16)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if kind == "train":
             from repro.models.common import count_params
 
@@ -149,7 +150,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, force=False, smoke_scale
                 arch, shape, mesh, smoke_scale=smoke_scale
             )
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = compat.cost_analysis(compiled)
             hlo_cost = analyze_hlo(compiled.as_text(), n_dev)
             rec.update(
                 status="ok",

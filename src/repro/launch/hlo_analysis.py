@@ -134,9 +134,14 @@ def _split_computations(hlo: str):
 
 def _operand_names(rhs: str, opcode: str):
     inner = rhs.split(opcode + "(", 1)[1]
-    # cut at matching close paren (operands never contain parens)
+    # cut at matching close paren (array operands never contain parens)
     inner = inner.split(")", 1)[0]
-    return [t.strip().lstrip("%") for t in inner.split(",") if t.strip().startswith("%")]
+    # jax 0.4.x prints typed operands with layout braces
+    # ("f32[64,64]{1,0} %name"); strip layouts so their commas don't split
+    # the operand list, then pull the %names (works for the bare "%a, %b"
+    # style of newer jax too).
+    inner = re.sub(r"\{[^}]*\}", "", inner)
+    return re.findall(r"%([\w\.\-]+)", inner)
 
 
 def analyze_hlo(hlo: str, num_partitions: int = 1) -> Cost:

@@ -12,18 +12,20 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
+    return compat.make_mesh(
         shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
     )
 
 
 def make_host_mesh():
     """1-device mesh for tests/examples on this CPU container."""
-    return jax.make_mesh(
+    return compat.make_mesh(
         (1, 1), ("data", "model"),
         axis_types=(jax.sharding.AxisType.Auto,) * 2,
     )

@@ -11,6 +11,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import get_bundle
 from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_host_mesh
@@ -22,7 +23,7 @@ def serve(arch: str, *, batch: int, prompt_len: int, gen: int, smoke: bool,
     mesh = mesh or make_host_mesh()
     max_len = prompt_len + gen
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params = bundle.init(jax.random.PRNGKey(0), param_dtype)
         prompts = jax.random.randint(
             jax.random.PRNGKey(1), (batch, prompt_len), 0, bundle.cfg.vocab

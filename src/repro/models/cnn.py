@@ -2,8 +2,10 @@
 
 Each network is a list of conv-layer geometries (the paper's experiments
 time only the ConvLs).  ``run_convls`` executes the stack either
-single-node ("naive") or with every ConvL dispatched through FCDCC — this
-drives benchmarks/exp1..exp5 and the coded-inference example.
+single-node ("naive") or — when given a plan — as a thin wrapper over the
+``repro.core.pipeline.CodedPipeline`` engine (every ConvL coded, filters
+encoded once, batched inputs) — this drives benchmarks/exp1..exp5 and the
+coded-inference example.
 """
 from __future__ import annotations
 
@@ -12,8 +14,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.fcdcc import CodedConv2d, FcdccPlan
+from repro.core.fcdcc import FcdccPlan
 from repro.core.partition import ConvGeometry
+from repro.core.pipeline import CodedPipeline, plan_layers, relu_pool
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,39 +97,34 @@ def init_cnn(name: str, key, dtype=jnp.float32):
     }
 
 
-def _pool(x, f):
-    if f == 1:
-        return x
-    c, h, w = x.shape
-    h2, w2 = h - h % f, w - w % f
-    return jnp.max(x[:, :h2, :w2].reshape(c, h2 // f, f, w2 // f, f), axis=(2, 4))
-
-
 def run_convls(name: str, params, x, *, plan: FcdccPlan | None = None,
                per_layer_kab: dict | None = None, worker_ids=None, backend="lax"):
-    """Run the ConvL stack on one image (C,H,W).
+    """Run the ConvL stack on one image (C,H,W) or a batch (B,C,H,W).
 
-    ``plan=None`` -> single-node naive execution; otherwise every ConvL goes
-    through the FCDCC pipeline with (k_a, k_b) from ``per_layer_kab`` (falls
-    back to the plan's defaults).
+    ``plan=None`` -> single-node naive execution; otherwise the stack is
+    compiled into a ``CodedPipeline`` (filters encoded once, one jitted
+    worker program per distinct geometry) with (k_a, k_b) from
+    ``per_layer_kab`` (falls back to the plan's defaults).  ``worker_ids``
+    are the available workers; each layer decodes from the first delta.
     """
     _, layers = CNN_SPECS[name]
-    for layer in layers:
-        hw = x.shape[1]
-        if plan is None:
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[None]
+    if plan is None:
+        for layer in layers:
             y = jax.lax.conv_general_dilated(
-                x[None], params[layer.name],
+                x, params[layer.name],
                 window_strides=(layer.stride, layer.stride),
                 padding=((layer.padding, layer.padding),) * 2,
                 dimension_numbers=("NCHW", "OIHW", "NCHW"),
-            )[0]
-        else:
-            k_a, k_b = (per_layer_kab or {}).get(
-                layer.name, (plan.k_a, plan.k_b)
             )
-            lplan = FcdccPlan(n=plan.n, k_a=k_a, k_b=k_b)
-            geo = layer_geometry(layer, hw, k_a, k_b)
-            coded = CodedConv2d(lplan, geo, backend=backend)
-            y = coded.run_simulated(x, params[layer.name], worker_ids)
-        x = _pool(jax.nn.relu(y), layer.pool)
-    return x
+            x = relu_pool(y, layer.pool)
+    else:
+        specs = plan_layers(
+            layers, x.shape[-1], plan.n,
+            default_kab=(plan.k_a, plan.k_b), per_layer_kab=per_layer_kab,
+        )
+        pipe = CodedPipeline(specs, params, backend=backend)
+        x = pipe.run(x, worker_ids)
+    return x[0] if squeeze else x

@@ -1,8 +1,7 @@
 """CRME code construction: structure, invertibility, conditioning."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.baselines import make_poly_codes, poly_recovery_matrix, real_points
 from repro.core.crme import (

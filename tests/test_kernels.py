@@ -2,8 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.coded_gemm import coded_gemm, coded_gemm_ref, crme_decode, crme_encode
 from repro.kernels.conv2d import conv2d_im2col, conv2d_ref

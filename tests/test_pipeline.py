@@ -1,0 +1,209 @@
+"""The batched multi-layer coded inference engine (CodedPipeline).
+
+Covers: batched CodedConv2d == batched lax conv; pipeline == naive
+run_convls; output invariance over surviving-worker subsets
+(any-delta-of-n); the encode-filters-exactly-once contract; worker-program
+sharing across same-geometry layers; and the persistent cluster's
+run_pipeline path under stragglers.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CodedConv2d, CodedPipeline, ConvGeometry, FcdccPlan
+from repro.core.pipeline import plan_layers
+from repro.models.cnn import CNN_SPECS, ConvL, init_cnn, run_convls
+from repro.runtime import FcdccCluster, StragglerModel
+
+RNG = np.random.default_rng(0)
+
+
+def _batched_lax_conv(x, k, stride, padding):
+    return jax.lax.conv_general_dilated(
+        x, k, (stride, stride), ((padding, padding),) * 2,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+@pytest.mark.parametrize("n,k_a,k_b,ids", [
+    (6, 2, 4, [5, 3]),
+    (5, 2, 2, [4]),
+    (4, 1, 8, [3, 1, 0, 2]),
+    (4, 8, 1, [0, 3, 2, 1]),
+])
+def test_batched_coded_conv_matches_lax(n, k_a, k_b, ids):
+    plan = FcdccPlan(n=n, k_a=k_a, k_b=k_b)
+    geo = ConvGeometry(3, 8, 13, 11, 3, 3, 1, 1, k_a, k_b)
+    layer = CodedConv2d(plan, geo)
+    x = jnp.asarray(RNG.standard_normal((4, 3, 13, 11)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((8, 3, 3, 3)), jnp.float32)
+    y = layer.run_simulated(x, k, ids)
+    ref = _batched_lax_conv(x, k, 1, 1)
+    assert y.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+
+def test_batched_matches_per_image():
+    plan = FcdccPlan(n=6, k_a=2, k_b=4)
+    geo = ConvGeometry(2, 8, 12, 10, 3, 3, 2, 0, 2, 4)
+    layer = CodedConv2d(plan, geo)
+    x = jnp.asarray(RNG.standard_normal((3, 2, 12, 10)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((8, 2, 3, 3)), jnp.float32)
+    yb = layer.run_simulated(x, k, [4, 1])
+    for i in range(3):
+        yi = layer.run_simulated(x[i], k, [4, 1])
+        np.testing.assert_allclose(np.asarray(yb[i]), np.asarray(yi), atol=1e-5)
+
+
+# a 3-layer stack exercising stride, padding, pooling, and a repeated
+# geometry (l2/l3 share the worker-program signature)
+STACK = [
+    ConvL("l1", 2, 8, 3, stride=1, padding=1, pool=2),
+    ConvL("l2", 8, 8, 3, padding=1),
+    ConvL("l3", 8, 8, 3, padding=1),
+]
+
+
+def _stack_params(layers, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        l.name: jnp.asarray(
+            rng.standard_normal((l.out_ch, l.in_ch, l.kernel, l.kernel))
+            * (l.in_ch * l.kernel**2) ** -0.5,
+            jnp.float32,
+        )
+        for l in layers
+    }
+
+
+def _naive_stack(layers, params, x):
+    for l in layers:
+        x = _batched_lax_conv(x, params[l.name], l.stride, l.padding)
+        x = jax.nn.relu(x)
+        if l.pool > 1:
+            h, w = x.shape[-2:]
+            h2, w2 = h - h % l.pool, w - w % l.pool
+            x = jnp.max(
+                x[..., :h2, :w2].reshape(
+                    x.shape[:-2] + (h2 // l.pool, l.pool, w2 // l.pool, l.pool)
+                ),
+                axis=(-3, -1),
+            )
+    return x
+
+
+def test_pipeline_matches_naive_and_survivor_invariance():
+    params = _stack_params(STACK)
+    specs = plan_layers(STACK, 16, 6, default_kab=(2, 4))
+    pipe = CodedPipeline(specs, params)
+    x = jnp.asarray(RNG.standard_normal((3, 2, 16, 16)), jnp.float32)
+    y = pipe.run(x)
+    ref = _naive_stack(STACK, params, x)
+    assert y.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=2e-3, atol=2e-3)
+    # any-delta-of-n: every survivor subset decodes to the same output
+    y0 = np.asarray(y)
+    for ids in ([5, 4, 3, 2, 1, 0], [2, 5, 0, 3], [4, 2]):
+        ys = np.asarray(pipe.run(x, worker_ids=ids))
+        np.testing.assert_allclose(ys, y0, rtol=1e-4, atol=1e-4)
+
+
+def test_filters_encoded_exactly_once():
+    params = _stack_params(STACK)
+    specs = plan_layers(STACK, 16, 6, default_kab=(2, 4))
+    pipe = CodedPipeline(specs, params)
+    assert pipe.filter_encode_calls == len(STACK)
+    x = jnp.asarray(RNG.standard_normal((2, 2, 16, 16)), jnp.float32)
+    pipe.run(x)
+    pipe.run(x, worker_ids=[5, 3, 1, 0, 2, 4])
+    pipe.run(x[0])  # single-image path
+    assert pipe.filter_encode_calls == len(STACK)  # still once per layer
+
+
+def test_worker_program_shared_across_same_geometry_layers():
+    params = _stack_params(STACK)
+    specs = plan_layers(STACK, 16, 6, default_kab=(2, 4))
+    pipe = CodedPipeline(specs, params)
+    pipe.run(jnp.asarray(RNG.standard_normal((2, 2, 16, 16)), jnp.float32))
+    # all three layers have stride 1 and the same (ell_a, ell_b): one program
+    assert pipe.num_worker_programs == 1
+
+
+def test_run_convls_wrapper_matches_pipeline():
+    params = init_cnn("lenet5", jax.random.PRNGKey(0))
+    x = jnp.asarray(RNG.standard_normal((2, 1, 32, 32)), jnp.float32)
+    naive = run_convls("lenet5", params, x)
+    coded = run_convls("lenet5", params, x, plan=FcdccPlan(n=6, k_a=2, k_b=2))
+    np.testing.assert_allclose(np.asarray(coded), np.asarray(naive),
+                               rtol=2e-3, atol=2e-3)
+    # single-image call keeps the seed's (C,H,W) contract
+    one = run_convls("lenet5", params, x[0], plan=FcdccPlan(n=6, k_a=2, k_b=2))
+    np.testing.assert_allclose(np.asarray(one), np.asarray(coded[0]), atol=1e-5)
+
+
+def test_cluster_run_pipeline_under_stragglers():
+    params = _stack_params(STACK)
+    specs = plan_layers(STACK, 16, 6, default_kab=(2, 4))
+    pipe = CodedPipeline(specs, params)
+    delays = np.zeros(6)
+    delays[1] = 5.0          # straggler
+    delays[4] = np.inf       # dead worker
+    cluster = FcdccCluster(FcdccPlan(n=6, k_a=2, k_b=4),
+                           StragglerModel(delays), mode="simulated")
+    cluster.load_pipeline(pipe)
+    x = jnp.asarray(RNG.standard_normal((2, 2, 16, 16)), jnp.float32)
+    y, timings = cluster.run_pipeline(x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(pipe.run(x)),
+                               rtol=1e-4, atol=1e-4)
+    assert len(timings) == len(STACK)
+    for t in timings:
+        assert 1 not in t.used_workers and 4 not in t.used_workers
+        assert t.compute_s < 1.0
+    # resident filters: the pipeline's encode-once contract survived the run
+    assert pipe.filter_encode_calls == len(STACK)
+
+
+def test_cluster_run_layer_caches_filters_and_programs():
+    plan = FcdccPlan(n=6, k_a=2, k_b=4)
+    geo = ConvGeometry(3, 8, 12, 12, 3, 3, 1, 1, 2, 4)
+    cluster = FcdccCluster(plan, StragglerModel.none(6), mode="simulated")
+    x = jnp.asarray(RNG.standard_normal((3, 12, 12)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((8, 3, 3, 3)), jnp.float32)
+    y1, _ = cluster.run_layer(geo, x, k, layer_name="conv")
+    layer = cluster.coded_layer(geo)
+    assert layer.filter_encode_calls == 1
+    y2, _ = cluster.run_layer(geo, x, k, layer_name="conv")
+    assert layer.filter_encode_calls == 1  # resident, not re-encoded
+    # runs may pick different fastest-delta subsets; decode is exact up to
+    # float32 roundoff of the (well-conditioned) recovery inverses
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    assert len(cluster._programs) == 1
+
+
+def test_auto_partition_planner_feasible():
+    _, layers = CNN_SPECS["alexnet"]
+    specs = plan_layers(layers, 113, 12, q=16)
+    assert [s.name for s in specs] == [l.name for l in layers]
+    for s in specs:
+        assert s.plan.k_a * s.plan.k_b == 16
+        assert s.plan.delta <= 12
+    # spatial bookkeeping: each layer's input hw is the previous out_hw
+    hw = 113
+    for s, l in zip(specs, layers):
+        assert s.geo.height == hw
+        hw = s.out_hw
+
+
+@pytest.mark.slow
+def test_vgg16_pipeline_batch():
+    params = init_cnn("vgg16", jax.random.PRNGKey(1))
+    x = jnp.asarray(RNG.standard_normal((2, 3, 56, 56)), jnp.float32)
+    naive = run_convls("vgg16", params, x)
+    pipe_specs = plan_layers(CNN_SPECS["vgg16"][1], 56, 6, default_kab=(2, 4))
+    pipe = CodedPipeline(pipe_specs, params)
+    y = pipe.run(x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(naive),
+                               rtol=5e-3, atol=5e-3)
+    assert pipe.filter_encode_calls == 13
+    assert pipe.num_worker_programs <= 3
