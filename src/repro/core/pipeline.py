@@ -178,8 +178,6 @@ class CodedPipeline:
         self._cluster_programs: dict[tuple, callable] = {}  # per-worker call
         self._batch_programs: dict[tuple, callable] = {}  # vmapped over workers
         self._decoders: dict[int, callable] = {}  # one per layer, any subset
-        self._decode_mats: dict[tuple, np.ndarray] = {}  # tiny QxQ inverses
-        self._encode_cols: dict[tuple, np.ndarray] = {}  # sliced A-code cols
 
     # -- introspection -----------------------------------------------------
     @property
@@ -190,8 +188,10 @@ class CodedPipeline:
 
     @property
     def num_worker_programs(self) -> int:
-        """Distinct jitted worker programs in use (<= number of layers)."""
-        return len(self._batch_programs) or len(self._cluster_programs)
+        """Distinct jitted worker programs in use.  The vmapped
+        single-process cache and the per-worker cluster cache hold distinct
+        compiled programs even for the same program key, so both count."""
+        return len(self._batch_programs) + len(self._cluster_programs)
 
     def layer_delta(self, idx: int) -> int:
         return self.specs[idx].plan.delta
@@ -229,27 +229,25 @@ class CodedPipeline:
     def encode_columns(self, idx: int, worker_ids: tuple[int, ...]) -> np.ndarray:
         """The A-code encoding columns of the selected workers — encoding
         with this slice produces only those workers' coded input shares
-        ((n - delta)/n of the encode GEMM skipped versus full-n)."""
-        key = (self.specs[idx], worker_ids)
-        m = self._encode_cols.get(key)
-        if m is None:
-            code = self.layers[idx].a_code
-            m = self._encode_cols[key] = np.concatenate(
-                [code.worker_columns(i) for i in worker_ids], axis=1
-            )
-        return m
+        ((n - delta)/n of the encode GEMM skipped versus full-n).
+
+        Computed per call: the slice is a cheap host-side concat, and the
+        threads-mode cluster picks timing-dependent subsets, so a per-subset
+        cache would grow without bound on a persistent pipeline."""
+        code = self.layers[idx].a_code
+        return np.concatenate(
+            [code.worker_columns(i) for i in worker_ids], axis=1
+        )
 
     def decode_matrix(self, idx: int, worker_ids: tuple[int, ...]) -> np.ndarray:
         """The QxQ decode inverse for layer ``idx`` under the given
-        surviving-worker subset (host-side float64, cached — it is tiny, so
-        caching per subset is cheap, unlike caching compiled programs)."""
-        key = (self.specs[idx], worker_ids)
-        d = self._decode_mats.get(key)
-        if d is None:
-            layer = self.layers[idx]
-            e = recovery_matrix(layer.a_code, layer.b_code, list(worker_ids))
-            d = self._decode_mats[key] = np.linalg.inv(e.T)
-        return d
+        surviving-worker subset (host-side float64).  Computed per call —
+        inverting a QxQ (e.g. 16x16) matrix costs microseconds, while a
+        per-subset cache would grow up to C(n, delta) entries under the
+        threads-mode cluster's timing-dependent subsets."""
+        layer = self.layers[idx]
+        e = recovery_matrix(layer.a_code, layer.b_code, list(worker_ids))
+        return np.linalg.inv(e.T)
 
     def decoder(self, idx: int, worker_ids: tuple[int, ...]):
         """Decode+merge+relu+pool for layer ``idx`` under the given

@@ -130,15 +130,24 @@ def lower_cell(arch: str, shape: str, mesh, *, smoke_scale=None, extra=None):
 
 def run_cell(arch: str, shape: str, *, multi_pod: bool, force=False, smoke_scale=None):
     tag = f"{arch}__{shape}__{'2x16x16' if multi_pod else '16x16'}"
+    if smoke_scale:
+        # Smoke runs get their own cache file: a scaled-down record must
+        # never be resumed (or roofline-reported) as a production cell.
+        tag += f"__smoke{smoke_scale}"
     os.makedirs(RESULTS_DIR, exist_ok=True)
     out_path = os.path.join(RESULTS_DIR, tag + ".json")
     if os.path.exists(out_path) and not force:
         with open(out_path) as f:
-            return json.load(f)
+            cached = json.load(f)
+            # Records written before smoke tagging lack the key entirely and
+            # may be smoke-poisoned production cells -- recompute those.
+            if "smoke_scale" in cached and cached["smoke_scale"] == smoke_scale:
+                return cached
 
     bundle = get_bundle(arch)
     skip = cell_skip_reason(bundle, shape)
-    rec = {"arch": arch, "shape": shape, "multi_pod": multi_pod, "tag": tag}
+    rec = {"arch": arch, "shape": shape, "multi_pod": multi_pod, "tag": tag,
+           "smoke_scale": smoke_scale}
     if skip:
         rec.update(status="skipped", reason=skip)
     else:

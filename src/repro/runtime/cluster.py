@@ -93,8 +93,11 @@ class FcdccCluster:
         # persistent caches ------------------------------------------------
         self._coded_layers: dict[tuple, CodedConv2d] = {}
         self._programs: dict[tuple, object] = {}
-        self._resident_filters: dict[str, object] = {}
-        self._resident_src: dict[str, object] = {}  # source weights (identity)
+        # resident coded filters: one entry per layer name (re-planning a
+        # layer replaces its entry rather than accumulating), guarded by the
+        # filter-code key so filters encoded under one code never serve a
+        # different plan's decode.  Entry: (code_key, coded_filters, src).
+        self._resident: dict[str, tuple] = {}
         self.pipeline: CodedPipeline | None = None
 
     @property
@@ -121,14 +124,22 @@ class FcdccCluster:
             fn = self._programs[key] = jax.jit(layer.worker_compute)
         return fn
 
+    @staticmethod
+    def _filter_code_key(plan: FcdccPlan, geo: ConvGeometry) -> tuple:
+        """The parts of (plan, geo) that determine ``encode_filters`` output.
+        Coded filters are input-resolution independent, so H/W/stride/padding
+        are deliberately excluded — one preload serves any input size."""
+        return (plan, geo.in_channels, geo.out_channels,
+                geo.kernel_h, geo.kernel_w)
+
     def preload_filters(self, name: str, geo: ConvGeometry, k,
                         plan: FcdccPlan | None = None):
         """Encode ``k`` once and keep the coded filters resident under
         ``name`` (the deployment case: filters pre-stored on workers)."""
+        plan = plan or self.plan
         layer = self.coded_layer(geo, plan)
         ke = jax.block_until_ready(layer.encode_filters(k))
-        self._resident_filters[name] = ke
-        self._resident_src[name] = k
+        self._resident[name] = (self._filter_code_key(plan, geo), ke, k)
         return ke
 
     def load_pipeline(self, pipeline: CodedPipeline) -> None:
@@ -138,8 +149,8 @@ class FcdccCluster:
             raise ValueError(f"pipeline targets n={pipeline.n}, cluster has n={self.n}")
         self.pipeline = pipeline
         for spec, ke in zip(pipeline.specs, pipeline.coded_filters):
-            self._resident_filters[spec.name] = ke
-            self._resident_src[spec.name] = pipeline  # no raw-k source
+            key = self._filter_code_key(spec.plan, spec.geo)
+            self._resident[spec.name] = (key, ke, pipeline)
 
     # -- fastest-delta collection ------------------------------------------
     def _collect(self, compute_one, xe, ke, n: int, delta: int):
@@ -209,19 +220,24 @@ class FcdccCluster:
         t0 = time.perf_counter()
         xe = jax.block_until_ready(layer.encode_inputs(x))
         ke = coded_filters
+        code_key = self._filter_code_key(plan, geo)
         if ke is None and layer_name is not None:
-            # resident hit only when the caller passed no weights or the
-            # *same* weights object the cache was built from — new weights
-            # under an old name re-encode rather than silently going stale
-            if k is None or self._resident_src.get(layer_name) is k:
-                ke = self._resident_filters.get(layer_name)
+            # resident hit only under the same filter-code key AND when the
+            # caller passed no weights or the *same* weights object the cache
+            # was built from — a plan change or new weights under an old name
+            # re-encode rather than silently decoding against filters coded
+            # with the wrong matrices
+            ent = self._resident.get(layer_name)
+            if ent is not None and ent[0] == code_key and (
+                k is None or ent[2] is k
+            ):
+                ke = ent[1]
         if ke is None:
             if k is None:
                 raise ValueError("need k, coded_filters, or resident layer_name")
             ke = jax.block_until_ready(layer.encode_filters(k))
             if layer_name is not None:
-                self._resident_filters[layer_name] = ke
-                self._resident_src[layer_name] = k
+                self._resident[layer_name] = (code_key, ke, k)
         t_encode = time.perf_counter() - t0
 
         compute = self.worker_program(layer)
@@ -261,7 +277,10 @@ class FcdccCluster:
         timings = []
         for idx, spec in enumerate(pipe.specs):
             delta = spec.plan.delta
-            ke = self._resident_filters[spec.name]
+            # the pipeline's own filters, not the name-keyed store: a later
+            # preload/run_layer under a colliding layer name must not swap
+            # in foreign filters under this pipeline's decode
+            ke = pipe.coded_filters[idx]
 
             t0 = time.perf_counter()
             xe = jax.block_until_ready(pipe.encoder(idx)(x))

@@ -164,6 +164,26 @@ def test_cluster_run_pipeline_under_stragglers():
     assert pipe.filter_encode_calls == len(STACK)
 
 
+def test_run_pipeline_immune_to_resident_name_collision():
+    """A preload (or run_layer) under a name colliding with a pipeline layer
+    must not swap foreign filters into the pipeline's decode — run_pipeline
+    reads the pipeline's own coded filters, not the name-keyed store."""
+    params = _stack_params(STACK)
+    specs = plan_layers(STACK, 16, 6, default_kab=(2, 4))
+    pipe = CodedPipeline(specs, params)
+    cluster = FcdccCluster(FcdccPlan(n=6, k_a=2, k_b=4),
+                           StragglerModel.none(6), mode="simulated")
+    cluster.load_pipeline(pipe)
+    x = jnp.asarray(RNG.standard_normal((2, 2, 16, 16)), jnp.float32)
+    y0, _ = cluster.run_pipeline(x)
+    foreign = _stack_params(STACK, seed=7)[specs[0].name]
+    cluster.preload_filters(specs[0].name, specs[0].geo, foreign,
+                            plan=specs[0].plan)
+    y1, _ = cluster.run_pipeline(x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_cluster_run_layer_caches_filters_and_programs():
     plan = FcdccPlan(n=6, k_a=2, k_b=4)
     geo = ConvGeometry(3, 8, 12, 12, 3, 3, 1, 1, 2, 4)
@@ -179,6 +199,40 @@ def test_cluster_run_layer_caches_filters_and_programs():
     # float32 roundoff of the (well-conditioned) recovery inverses
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
     assert len(cluster._programs) == 1
+
+
+def test_resident_filters_not_reused_across_plans():
+    """Filters preloaded under one (k_a, k_b) code must never serve a
+    run_layer under a different plan — wrong code matrices would decode to
+    silently wrong output.  The resident entry is guarded by a filter-code
+    key (plan + filter shape, NOT input resolution), so a plan change with
+    no weights falls through to the need-k error, a resolution change keeps
+    serving the same coded filters, and re-planning a layer replaces its
+    entry instead of accumulating."""
+    plan1 = FcdccPlan(n=12, k_a=2, k_b=4)
+    plan2 = FcdccPlan(n=12, k_a=4, k_b=2)
+    geo1 = ConvGeometry(3, 8, 12, 12, 3, 3, 1, 1, 2, 4)
+    geo2 = ConvGeometry(3, 8, 12, 12, 3, 3, 1, 1, 4, 2)
+    cluster = FcdccCluster(plan1, StragglerModel.none(12), mode="simulated")
+    x = jnp.asarray(RNG.standard_normal((3, 12, 12)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((8, 3, 3, 3)), jnp.float32)
+    cluster.preload_filters("conv", geo1, k, plan=plan1)
+    with pytest.raises(ValueError, match="need k"):
+        cluster.run_layer(geo2, x, None, layer_name="conv", plan=plan2)
+    # coded filters are resolution-independent: a larger input under the
+    # same code hits the resident store (its layer never encodes filters)
+    geo1_hi = ConvGeometry(3, 8, 16, 16, 3, 3, 1, 1, 2, 4)
+    x_hi = jnp.asarray(RNG.standard_normal((3, 16, 16)), jnp.float32)
+    cluster.run_layer(geo1_hi, x_hi, None, layer_name="conv", plan=plan1)
+    assert cluster.coded_layer(geo1_hi, plan1).filter_encode_calls == 0
+    # the original plan still hits its resident filters (no re-encode) ...
+    y1, _ = cluster.run_layer(geo1, x, None, layer_name="conv", plan=plan1)
+    assert cluster.coded_layer(geo1, plan1).filter_encode_calls == 1
+    # ... and passing k under the new plan encodes fresh, correct filters,
+    # replacing the layer's resident entry (no unbounded growth)
+    y2, _ = cluster.run_layer(geo2, x, k, layer_name="conv", plan=plan2)
+    assert len(cluster._resident) == 1
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
 
 
 def test_auto_partition_planner_feasible():
