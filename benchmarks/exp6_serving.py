@@ -1,0 +1,140 @@
+"""Experiment 6 (beyond paper): coded serving engine under request traffic.
+
+Drives Poisson request arrivals at a ``CodedServer`` (continuous batching
+over one resident ``CodedPipeline``) for several straggler models — fixed
+stragglers, random-uniform stragglers, dead workers — and reports
+per-request p50/p95/p99 end-to-end latency plus images/s throughput,
+against the sequential baseline that issues one ``run_pipeline`` call per
+request on the same cluster configuration.
+
+The claim measured here is the serving-system one (cf. CoCoI): coded
+redundancy handles the stragglers, continuous batching amortizes the
+per-layer encode/dispatch/decode overhead across concurrent requests —
+so the engine sustains strictly higher throughput than per-request calls
+under the *same* straggler model.
+
+  PYTHONPATH=src python -m benchmarks.exp6_serving --smoke
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.models.cnn import CNN_SPECS, init_cnn, input_hw
+from repro.runtime import FcdccCluster, StragglerModel
+from repro.serving import CodedServer
+from repro.core.pipeline import build_cnn_pipeline
+
+from .common import emit
+
+BUCKETS = (1, 2, 4, 8)
+
+
+def _scenarios(n: int, delay: float, seed: int = 0):
+    dead = np.zeros(n)
+    dead[seed % n] = np.inf
+    return {
+        "none": StragglerModel.none(n),
+        "fixed2": StragglerModel.fixed(n, 2, delay, seed=seed),
+        "random_p25": StragglerModel.random_uniform(n, 0.25, delay, seed=seed),
+        "dead1": StragglerModel(dead),
+    }
+
+
+def _sequential_baseline(arch, params, n, kab, hw, straggler, xs):
+    """One ``run_pipeline`` call per request on a warm persistent cluster —
+    the pre-serving way to handle concurrent traffic."""
+    pipeline = build_cnn_pipeline(arch, params, n, default_kab=kab,
+                                  input_hw=hw)
+    cluster = FcdccCluster(pipeline.specs[0].plan, straggler, mode="threads")
+    cluster.load_pipeline(pipeline)
+    cluster.run_pipeline(xs[0][None])  # warm: jit + resident filters
+    t0 = time.perf_counter()
+    for x in xs:
+        cluster.run_pipeline(x[None])
+    wall = time.perf_counter() - t0
+    cluster.shutdown()
+    return len(xs) / wall
+
+
+def _serve(arch, params, n, kab, hw, straggler, xs, rate_hz, rng):
+    server = CodedServer.from_cnn(
+        arch, params, n, default_kab=kab, input_hw=hw,
+        straggler=straggler, mode="threads", bucket_sizes=BUCKETS,
+    )
+    server.warmup()
+    gaps = rng.exponential(1.0 / rate_hz, size=len(xs))
+    with server:
+        handles = []
+        for x, gap in zip(xs, gaps):
+            handles.append(server.submit(x))
+            time.sleep(gap)
+        for h in handles:
+            h.result(timeout=300.0)
+        stats = server.stats()
+    return stats, server.pipeline
+
+
+def run(quick: bool = True, requests: int | None = None,
+        rate_hz: float = 400.0, assert_speedup: bool = False):
+    arch = "lenet5" if quick else "alexnet"
+    n, kab = 8, (2, 4)
+    # always the reduced resolution: even --full keeps AlexNet at the CPU
+    # demo size — the sweep scales request *traffic*, not image size
+    hw = input_hw(arch, smoke=True)
+    delay = 0.05 if quick else 0.2
+    requests = requests or (16 if quick else 32)
+
+    rng = np.random.default_rng(0)
+    params = init_cnn(arch, jax.random.PRNGKey(0))
+    c0 = CNN_SPECS[arch][1][0].in_ch
+    xs = [np.asarray(v, np.float32)
+          for v in rng.standard_normal((requests, c0, hw, hw))]
+
+    failures = []
+    for name, straggler in _scenarios(n, delay).items():
+        seq_ips = _sequential_baseline(arch, params, n, kab, hw, straggler, xs)
+        stats, pipeline = _serve(arch, params, n, kab, hw, straggler, xs,
+                                 rate_hz, rng)
+        speedup = stats.images_per_s / seq_ips
+        emit(
+            f"exp6/{arch}/{name}/serving_e2e_p50", stats.e2e_p50_s,
+            f"p95={stats.e2e_p95_s*1e3:.1f}ms p99={stats.e2e_p99_s*1e3:.1f}ms "
+            f"queue_p50={stats.queue_wait_p50_s*1e3:.1f}ms "
+            f"mean_batch={stats.mean_batch_real:.2f}",
+        )
+        emit(
+            f"exp6/{arch}/{name}/serving_throughput", 1.0 / stats.images_per_s,
+            f"images_per_s={stats.images_per_s:.1f} "
+            f"sequential={seq_ips:.1f} speedup={speedup:.2f}x "
+            f"program_traces={pipeline.worker_program_traces}",
+        )
+        # the acceptance claim is about straggler models: continuous
+        # batching must beat per-request calls under the *same* injected
+        # stragglers.  The straggler-free row is informational — its margin
+        # is pure scheduler-overhead-vs-amortization and too timing-noise
+        # sensitive to gate CI on.
+        if name != "none" and speedup <= 1.0:
+            failures.append((name, round(speedup, 3)))
+
+    if assert_speedup and failures:
+        raise SystemExit(
+            f"serving engine did not beat sequential run_pipeline: {failures}"
+        )
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="AlexNet-scale sweep")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sweep + assert serving beats sequential")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--rate-hz", type=float, default=400.0)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=not args.full, requests=args.requests, rate_hz=args.rate_hz,
+        assert_speedup=args.smoke)

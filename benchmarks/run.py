@@ -14,7 +14,7 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sizes (slow)")
-    ap.add_argument("--only", default=None, help="comma list: exp1..exp5,roofline")
+    ap.add_argument("--only", default=None, help="comma list: exp1..exp6,roofline")
     ap.add_argument("--batch", type=int, default=4,
                     help="batch size for the coded-pipeline sections (exp1/exp4)")
     args = ap.parse_args()
@@ -27,6 +27,7 @@ def main() -> None:
         exp3_scalability,
         exp4_stragglers,
         exp5_partition_opt,
+        exp6_serving,
         roofline_report,
     )
 
@@ -36,6 +37,7 @@ def main() -> None:
         "exp3": exp3_scalability.run,
         "exp4": lambda quick: exp4_stragglers.run(quick, batch=args.batch),
         "exp5": exp5_partition_opt.run,
+        "exp6": exp6_serving.run,
         "roofline": roofline_report.run,
     }
     print("name,us_per_call,derived")

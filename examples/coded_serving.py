@@ -1,0 +1,72 @@
+"""Coded serving engine in ~40 lines: LeNet-5 behind a CodedServer.
+
+Starts a continuous-batching server over one resident coded pipeline on
+n=8 simulated workers (one of them a straggler), fires a burst of
+concurrent requests from client threads, and prints each request's
+queue-wait / execute / end-to-end latency.  The straggler never shows up
+in the latencies — the coded cluster decodes from the fastest delta
+workers, and late arrivals join the next layer boundary instead of
+waiting for the batch ahead.
+
+  PYTHONPATH=src python examples/coded_serving.py [--requests 12]
+"""
+import argparse
+import threading
+
+import jax
+import numpy as np
+
+from repro.models.cnn import init_cnn
+from repro.runtime import StragglerModel
+from repro.serving import CodedServer
+
+N_WORKERS = 8
+
+
+def main(requests: int = 12):
+    rng = np.random.default_rng(0)
+    params = init_cnn("lenet5", jax.random.PRNGKey(0))
+
+    delays = np.zeros(N_WORKERS)
+    delays[3] = 0.25  # one injected straggler (+250 ms per subtask)
+    server = CodedServer.from_cnn(
+        "lenet5", params, N_WORKERS, default_kab=(2, 4),
+        straggler=StragglerModel(delays), mode="threads",
+        bucket_sizes=(1, 2, 4),
+    )
+    server.warmup()  # pre-trace every (layer, bucket) program
+
+    xs = rng.standard_normal((requests, 1, 32, 32)).astype(np.float32)
+    handles = [None] * requests
+
+    def client(i):  # each request arrives on its own client thread
+        handles[i] = server.submit(xs[i])
+
+    with server:
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(requests)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for i, h in enumerate(handles):
+            y = h.result(timeout=60.0)
+            rec = next(r for r in server.metrics.records()
+                       if r.request_id == h.request_id)
+            print(
+                f"request {h.request_id:2d}: queue {rec.queue_wait_s*1e3:6.1f} ms  "
+                f"execute {rec.execute_s*1e3:6.1f} ms  "
+                f"e2e {rec.e2e_s*1e3:6.1f} ms  "
+                f"(batch {rec.batch_real}/{rec.bucket}, out {y.shape})"
+            )
+    stats = server.stats()
+    print(f"\n{stats.summary_line()}")
+    print(f"jit programs: {server.pipeline.worker_program_traces} traces "
+          f"for buckets {server.pipeline.bucket_sizes} — bounded by bucket "
+          f"count, despite the straggler on worker 3.")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    main(**vars(ap.parse_args()))

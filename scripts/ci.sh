@@ -1,10 +1,18 @@
 #!/usr/bin/env bash
 # Fast CI suite: the ROADMAP tier-1 verify command with slow (VGG-sized)
-# cases deselected.  Extra args are passed through to pytest.
+# cases deselected, then the serving-engine smoke benchmark (exp6), which
+# asserts the continuous-batching server beats sequential run_pipeline
+# under every straggler model.  Extra args are passed through to pytest.
 #
-#   scripts/ci.sh            # fast suite
+# Tests run with a per-test watchdog (tests/conftest.py, REPRO_TEST_TIMEOUT
+# seconds) so a hung scheduler/worker thread fails fast instead of wedging
+# the suite; -x stops the run at the first failure.
+#
+#   scripts/ci.sh            # fast suite + serving smoke
 #   scripts/ci.sh -m ""      # include slow cases too
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q -m "not slow" "$@"
+export REPRO_TEST_TIMEOUT="${REPRO_TEST_TIMEOUT:-300}"
+python -m pytest -x -q -m "not slow" "$@"
+python -m benchmarks.exp6_serving --smoke

@@ -153,7 +153,8 @@ class CodedPipeline:
     """
 
     def __init__(self, specs: Sequence[CodedLayerSpec], params: dict, *,
-                 backend: str = "lax", fused_worker: bool = True):
+                 backend: str = "lax", fused_worker: bool = True,
+                 bucket_sizes: Sequence[int] | None = None):
         specs = list(specs)
         if not specs:
             raise ValueError("empty pipeline")
@@ -163,6 +164,12 @@ class CodedPipeline:
         self.specs = specs
         self.n = ns.pop()
         self.backend = backend
+        # batch-size buckets: callers pad request batches up to one of these
+        # sizes (``pad_to_bucket``) so jit compiles a *bounded* set of batch
+        # programs — one per (program, bucket), never one per batch size
+        self.bucket_sizes: tuple[int, ...] | None = (
+            self.normalize_buckets(bucket_sizes) if bucket_sizes else None
+        )
         self.layers = [
             CodedConv2d(s.plan, s.geo, backend=backend, fused_worker=fused_worker)
             for s in specs
@@ -179,6 +186,15 @@ class CodedPipeline:
         self._batch_programs: dict[tuple, callable] = {}  # vmapped over workers
         self._decoders: dict[int, callable] = {}  # one per layer, any subset
 
+    @staticmethod
+    def normalize_buckets(bucket_sizes: Sequence[int]) -> tuple[int, ...]:
+        """Sorted, deduplicated, validated bucket tuple (assign this — never
+        a raw sequence — to ``bucket_sizes``)."""
+        buckets = tuple(sorted(set(int(b) for b in bucket_sizes)))
+        if not buckets or buckets[0] < 1:
+            raise ValueError(f"bucket sizes must be >= 1, got {bucket_sizes}")
+        return buckets
+
     # -- introspection -----------------------------------------------------
     @property
     def filter_encode_calls(self) -> int:
@@ -193,8 +209,51 @@ class CodedPipeline:
         compiled programs even for the same program key, so both count."""
         return len(self._batch_programs) + len(self._cluster_programs)
 
+    @property
+    def worker_program_traces(self) -> int:
+        """Total shape-specialized compilations across all jitted worker
+        programs.  With bucketed batches this is bounded by
+        ``len(layer geometries) * len(bucket_sizes)`` regardless of how many
+        distinct request-batch sizes the server has seen."""
+        return sum(
+            fn._cache_size() if hasattr(fn, "_cache_size") else 1
+            for cache in (self._batch_programs, self._cluster_programs)
+            for fn in cache.values()
+        )
+
     def layer_delta(self, idx: int) -> int:
         return self.specs[idx].plan.delta
+
+    # -- batch-size bucketing ----------------------------------------------
+    @property
+    def max_batch(self) -> int | None:
+        """Largest admissible request batch (None = unbucketed/unbounded)."""
+        return self.bucket_sizes[-1] if self.bucket_sizes else None
+
+    def bucketize(self, batch: int) -> int:
+        """Smallest bucket >= ``batch`` (identity when unbucketed)."""
+        if self.bucket_sizes is None:
+            return batch
+        for b in self.bucket_sizes:
+            if b >= batch:
+                return b
+        raise ValueError(
+            f"batch {batch} exceeds the largest bucket {self.bucket_sizes[-1]}"
+        )
+
+    def pad_to_bucket(self, x: jnp.ndarray) -> tuple[jnp.ndarray, int]:
+        """Zero-pad a ``(B, C, H, W)`` batch up to its bucket size.
+
+        Returns ``(padded, real_batch)``; the caller slices the first
+        ``real_batch`` rows of the output.  Padding rows are zeros — they
+        ride through the linear code and the convs as dead weight and are
+        dropped after decode."""
+        b = x.shape[0]
+        bucket = self.bucketize(b)
+        if bucket == b:
+            return x, b
+        pad = jnp.zeros((bucket - b,) + x.shape[1:], x.dtype)
+        return jnp.concatenate([x, pad], axis=0), b
 
     # -- program caches ----------------------------------------------------
     def encoder(self, idx: int):
@@ -249,14 +308,14 @@ class CodedPipeline:
         e = recovery_matrix(layer.a_code, layer.b_code, list(worker_ids))
         return np.linalg.inv(e.T)
 
-    def decoder(self, idx: int, worker_ids: tuple[int, ...]):
-        """Decode+merge+relu+pool for layer ``idx`` under the given
-        surviving-worker subset.
+    def decoder_fn(self, idx: int):
+        """The jitted decode+merge+relu+pool program for layer ``idx``,
+        taking ``(outs, decode_matrix)``.
 
         One jitted program per layer: the decode inverse is a *runtime
         argument* (constant (Q, Q) shape), so the timing-dependent
         fastest-delta subsets chosen by the cluster never trigger a
-        recompile or grow the program cache.  Returns ``fn(outs)``.
+        recompile or grow the program cache.
         """
         spec = self.specs[idx]
         fn = self._decoders.get(idx)
@@ -270,6 +329,12 @@ class CodedPipeline:
                 return relu_pool(merge_output(blocks, _geo), _pool)
 
             fn = self._decoders[idx] = jax.jit(dec)
+        return fn
+
+    def decoder(self, idx: int, worker_ids: tuple[int, ...]):
+        """``decoder_fn`` with the subset's decode inverse bound; returns
+        ``fn(outs)``."""
+        fn = self.decoder_fn(idx)
         d = jnp.asarray(self.decode_matrix(idx, worker_ids))
         return lambda outs: fn(outs, d)
 
@@ -308,6 +373,59 @@ class CodedPipeline:
             x = self.decoder(idx, ids)(outs)
         return x[0] if squeeze else x
 
+    def prepare(self, worker_ids=None) -> list[tuple]:
+        """Pre-pick every layer's survivor subset and build all host-side
+        code artifacts up front: per-layer ``(encode_columns, selector,
+        decode_matrix)`` as device arrays.
+
+        ``worker_ids`` is either one available-worker list shared by all
+        layers (each layer decodes from its first delta) or a per-layer
+        sequence of subsets.  The returned plan is what ``run_prepared``
+        executes without any host work between layers."""
+        per_layer = (
+            worker_ids is not None
+            and len(worker_ids) == len(self.specs)
+            and all(isinstance(w, (list, tuple)) for w in worker_ids)
+        )
+        prepped = []
+        for idx in range(len(self.specs)):
+            avail = worker_ids[idx] if per_layer else worker_ids
+            ids = self.layer_worker_ids(idx, avail)
+            prepped.append((
+                jnp.asarray(self.encode_columns(idx, ids)),
+                jnp.asarray(ids),
+                jnp.asarray(self.decode_matrix(idx, ids)),
+            ))
+        return prepped
+
+    def run_prepared(self, x: jnp.ndarray, prepared=None, *, worker_ids=None) -> jnp.ndarray:
+        """Coded inference over pre-picked survivor subsets — the serving
+        fast path.
+
+        ``run`` interleaves host-side code prep (encode-column slices,
+        decode-inverse solves) between device launches, forcing a sync at
+        every layer boundary.  Here all of that comes from ``prepare``
+        (or is built once up front), so the whole stack is dispatched
+        asynchronously: decode of layer *i* overlaps encode of layer *i+1*
+        on the device queue.  The serving engine reuses one ``prepare``
+        plan across every batch that sees the same survivor set."""
+        if prepared is None:
+            prepared = self.prepare(worker_ids)
+        if len(prepared) != len(self.specs):
+            raise ValueError(
+                f"prepared plan covers {len(prepared)} layers, "
+                f"pipeline has {len(self.specs)}"
+            )
+        squeeze = x.ndim == 3
+        if squeeze:
+            x = x[None]
+        for idx, (m_sel, sel, d) in enumerate(prepared):
+            self.input_encode_calls += 1
+            xe = self.encoder(idx)(x, m_sel)
+            outs = self.worker_program(idx)(xe, self.coded_filters[idx][sel])
+            x = self.decoder_fn(idx)(outs, d)
+        return x[0] if squeeze else x
+
 
 def build_cnn_pipeline(
     name: str,
@@ -320,6 +438,7 @@ def build_cnn_pipeline(
     input_hw: int | None = None,
     weights: CostWeights = CostWeights(),
     backend: str = "lax",
+    bucket_sizes: Sequence[int] | None = None,
 ) -> CodedPipeline:
     """Compile one of the named CNNs (``lenet5``/``alexnet``/``vgg16``) into
     a ``CodedPipeline`` (lazy model import keeps core free of model deps)."""
@@ -335,4 +454,5 @@ def build_cnn_pipeline(
         per_layer_kab=per_layer_kab,
         weights=weights,
     )
-    return CodedPipeline(specs, params, backend=backend)
+    return CodedPipeline(specs, params, backend=backend,
+                         bucket_sizes=bucket_sizes)

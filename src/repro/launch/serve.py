@@ -1,7 +1,16 @@
-"""Batched serving driver: prefill + greedy decode loop with KV cache.
+"""Serving driver for both model families.
+
+  * LM archs (``qwen3-4b``, ...): batched prefill + greedy decode loop with
+    KV cache.
+  * CNN archs (``lenet5``/``alexnet``/``vgg16``): routed through the coded
+    serving engine — a ``repro.serving.CodedServer`` owning one resident
+    ``CodedPipeline`` on a straggler-simulating ``FcdccCluster``, with
+    continuous batching of concurrent requests.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
       --batch 4 --prompt-len 32 --gen 32
+  PYTHONPATH=src python -m repro.launch.serve --arch lenet5 --requests 16 \
+      --workers 8 --stragglers 2
 """
 from __future__ import annotations
 
@@ -10,15 +19,15 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import compat
 from repro.configs import get_bundle
-from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_host_mesh
 
 
-def serve(arch: str, *, batch: int, prompt_len: int, gen: int, smoke: bool,
-          mesh=None, param_dtype=jnp.float32):
+def serve_lm(arch: str, *, batch: int, prompt_len: int, gen: int, smoke: bool,
+             mesh=None, param_dtype=jnp.float32):
     bundle = get_bundle(arch, smoke=smoke)
     mesh = mesh or make_host_mesh()
     max_len = prompt_len + gen
@@ -34,7 +43,6 @@ def serve(arch: str, *, batch: int, prompt_len: int, gen: int, smoke: bool,
         # prefill by stepping the decoder over the prompt (cache warm-up);
         # attention-free archs carry recurrent state the same way.
         t0 = time.time()
-        tok = None
         for t in range(prompt_len):
             logits, cache = decode(
                 params, cache, {"tokens": prompts[:, t : t + 1], "pos": jnp.int32(t)}
@@ -42,7 +50,10 @@ def serve(arch: str, *, batch: int, prompt_len: int, gen: int, smoke: bool,
         prefill_s = time.time() - t0
 
         out_tokens = []
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        if prompt_len > 0:
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        else:  # empty prompt: no logits yet, start from BOS-like token 0
+            tok = jnp.zeros((batch, 1), jnp.int32)
         t0 = time.time()
         for t in range(prompt_len, max_len):
             out_tokens.append(tok)
@@ -59,15 +70,81 @@ def serve(arch: str, *, batch: int, prompt_len: int, gen: int, smoke: bool,
     return seq
 
 
+def serve_cnn(arch: str, *, requests: int, workers: int, stragglers: int,
+              straggler_delay: float, smoke: bool, kab=(2, 4),
+              mode: str = "threads", seed: int = 0):
+    """Fire ``requests`` concurrent single-image requests at a
+    ``CodedServer`` and print the latency/throughput stats.
+
+    Default ``mode="threads"``: the printed percentiles are wall-clock, so
+    injected straggler delays must really elapse (``simulated`` only shifts
+    the subset-selection clock and would make the knobs cosmetic)."""
+    from repro.models.cnn import CNN_SPECS, init_cnn, input_hw
+    from repro.runtime import StragglerModel
+    from repro.serving import CodedServer
+
+    hw0 = input_hw(arch, smoke=smoke)
+    rng = np.random.default_rng(seed)
+    params = init_cnn(arch, jax.random.PRNGKey(0))
+    straggler = StragglerModel.fixed(workers, stragglers, straggler_delay,
+                                     seed=seed)
+    server = CodedServer.from_cnn(
+        arch, params, workers, default_kab=kab, input_hw=hw0,
+        straggler=straggler, mode=mode,
+    )
+    server.warmup()
+    c0 = CNN_SPECS[arch][1][0].in_ch
+    xs = rng.standard_normal((requests, c0, hw0, hw0)).astype(np.float32)
+    with server:
+        handles = server.submit_many(xs)
+        outs = [h.result(timeout=300.0) for h in handles]
+    stats = server.stats()
+    print(f"{arch}: coded serving on n={workers} workers "
+          f"({stragglers} stragglers +{straggler_delay}s): "
+          f"{stats.summary_line()}")
+    return outs, stats
+
+
+def serve(arch: str, *, batch: int, prompt_len: int, gen: int, smoke: bool,
+          mesh=None, param_dtype=jnp.float32):
+    """Route by family: CNN archs hit the coded serving engine, LM archs
+    the decode loop (``batch`` becomes the number of concurrent requests)."""
+    from repro.models.cnn import CNN_SPECS
+
+    if arch in CNN_SPECS:
+        outs, _ = serve_cnn(arch, requests=batch, workers=8, stragglers=1,
+                            straggler_delay=0.1, smoke=smoke)
+        return outs
+    return serve_lm(arch, batch=batch, prompt_len=prompt_len, gen=gen,
+                    smoke=smoke, mesh=mesh, param_dtype=param_dtype)
+
+
 def main():
+    from repro.models.cnn import CNN_SPECS
+
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--arch", default="qwen3-4b",
+                    help=f"LM arch or CNN: {sorted(CNN_SPECS)}")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--smoke", action="store_true")
+    # CNN serving knobs
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--stragglers", type=int, default=2)
+    ap.add_argument("--straggler-delay", type=float, default=0.1)
+    ap.add_argument("--mode", default="threads",
+                    choices=("threads", "simulated"),
+                    help="threads = wall-clock straggler sleeps (CNN only)")
     args = ap.parse_args()
-    seq = serve(
+    if args.arch in CNN_SPECS:
+        serve_cnn(args.arch, requests=args.requests, workers=args.workers,
+                  stragglers=args.stragglers,
+                  straggler_delay=args.straggler_delay, smoke=args.smoke,
+                  mode=args.mode)
+        return
+    seq = serve_lm(
         args.arch, batch=args.batch, prompt_len=args.prompt_len,
         gen=args.gen, smoke=args.smoke,
     )

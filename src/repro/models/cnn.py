@@ -71,6 +71,14 @@ VGG16 = (
 
 CNN_SPECS = {"lenet5": LENET5, "alexnet": ALEXNET, "vgg16": VGG16}
 
+# reduced spatial sizes for CPU smoke runs (serve CLI, exp6, examples)
+SMOKE_HW = {"lenet5": 32, "alexnet": 113, "vgg16": 56}
+
+
+def input_hw(name: str, smoke: bool = False) -> int:
+    """Canonical input resolution of a named CNN (``smoke`` shrinks it)."""
+    return SMOKE_HW[name] if smoke else CNN_SPECS[name][0]
+
 
 def layer_geometry(layer: ConvL, hw: int, k_a: int = 1, k_b: int = 1) -> ConvGeometry:
     return ConvGeometry(

@@ -2,6 +2,7 @@ from .cluster import (
     ClusterDegraded,
     FcdccCluster,
     LayerTiming,
+    PendingBatch,
     StragglerModel,
     run_layer_elastic,
 )

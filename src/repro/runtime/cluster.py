@@ -9,16 +9,25 @@ arrivals are discarded, exactly like the paper's asynchronous collection.
 The cluster is **persistent**: jitted worker programs and encoded filters
 are cached across calls, so repeated ``run_layer``s (and every layer of a
 ``run_pipeline``) pay encode+jit once — the paper's deployment model where
-coded filters are pre-stored on the workers.
+coded filters are pre-stored on the workers.  The worker pool is persistent
+too: one single-thread executor per worker for the lifetime of the cluster
+(``shutdown()`` closes them), so a straggler still sleeping on a discarded
+subtask naturally backpressures *its own* node's next subtask — exactly the
+behaviour of a real busy worker — while fast workers are never blocked.
 
 Entry points:
   * ``run_layer`` — one FCDCC ConvL end-to-end with timing breakdown
     (encode / upload / compute / download / decode), simulated-clock mode
     for deterministic tests and real-thread mode for wall-clock numbers.
-  * ``load_pipeline`` / ``run_pipeline`` — stream a whole CNN ConvL stack
-    (a ``repro.core.pipeline.CodedPipeline`` with resident coded filters)
-    through the cluster for batched ``(B, C, H, W)`` inputs, returning the
-    output plus per-layer ``LayerTiming``.
+  * ``submit`` / ``collect`` — the asynchronous master: dispatch n coded
+    subtasks without blocking, then reap the fastest delta later.  The
+    serving engine (``repro.serving``) uses this split to interleave
+    layers of different in-flight request batches on one executor.
+  * ``load_pipeline`` / ``run_pipeline`` / ``run_pipeline_layer`` — stream
+    a whole CNN ConvL stack (a ``repro.core.pipeline.CodedPipeline`` with
+    resident coded filters) through the cluster for batched
+    ``(B, C, H, W)`` inputs, returning the output plus per-layer
+    ``LayerTiming``.
   * elastic recovery: if more than gamma workers fail outright, the master
     re-plans with a smaller (k_a, k_b) grid (fewer subtasks) and re-runs —
     the framework-level restart path.
@@ -27,7 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
 
 import jax
 import numpy as np
@@ -59,6 +68,22 @@ class StragglerModel:
     def random_uniform(n: int, p: float, delay: float, seed: int = 0) -> "StragglerModel":
         rng = np.random.default_rng(seed)
         return StragglerModel(np.where(rng.random(n) < p, delay, 0.0))
+
+
+@dataclasses.dataclass
+class PendingBatch:
+    """In-flight coded dispatch: n submitted subtasks awaiting ``collect``.
+
+    ``futures`` holds the per-worker futures (threads mode); ``results``
+    holds the precomputed outputs (simulated mode).  ``worker_times`` is
+    live — worker threads write into it as they finish — so ``collect``
+    snapshots it before returning.
+    """
+
+    futures: dict
+    results: dict
+    worker_times: list
+    t_start: float
 
 
 @dataclasses.dataclass
@@ -99,10 +124,52 @@ class FcdccCluster:
         # different plan's decode.  Entry: (code_key, coded_filters, src).
         self._resident: dict[str, tuple] = {}
         self.pipeline: CodedPipeline | None = None
+        # persistent worker pool: one single-thread executor per worker,
+        # created lazily on first threads-mode dispatch (see _ensure_pools)
+        self._pools: list[ThreadPoolExecutor] | None = None
+        # worker-program signatures already run once (compile happened
+        # outside a timed collect); keyed by (program key, operand shapes)
+        self._warmed: set[tuple] = set()
 
     @property
     def n(self) -> int:
         return self.plan.n
+
+    # -- persistent worker pool --------------------------------------------
+    def _ensure_pools(self) -> list[ThreadPoolExecutor]:
+        """One single-thread executor per worker, persistent across layers
+        and requests.  A straggler still sleeping on an abandoned subtask
+        keeps *its own* node busy (its next subtask queues behind, like a
+        real overloaded worker) without ever blocking the fast workers —
+        and no executor is constructed per call."""
+        if self._pools is None:
+            self._pools = [
+                ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix=f"fcdcc-worker-{i}"
+                )
+                for i in range(self.n)
+            ]
+        return self._pools
+
+    def shutdown(self) -> None:
+        """Release the persistent worker pool (idempotent; the cluster can
+        be used again afterwards — pools are re-created lazily)."""
+        pools, self._pools = self._pools, None
+        if pools:
+            for ex in pools:
+                ex.shutdown(wait=False, cancel_futures=True)
+
+    def __del__(self):  # best-effort: interpreter teardown may race us
+        try:
+            self.shutdown()
+        except Exception:
+            pass
+
+    def __enter__(self) -> "FcdccCluster":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
 
     # -- persistent program/filter caches ---------------------------------
     def coded_layer(self, geo: ConvGeometry, plan: FcdccPlan | None = None) -> CodedConv2d:
@@ -153,12 +220,13 @@ class FcdccCluster:
             self._resident[spec.name] = (key, ke, pipeline)
 
     # -- fastest-delta collection ------------------------------------------
-    def _collect(self, compute_one, xe, ke, n: int, delta: int):
-        """Dispatch n coded subtasks, return (results, worker_times, t_compute)
-        with exactly the fastest delta results kept (master discards the
-        rest, as in the paper's asynchronous collection)."""
-        worker_times = [0.0] * n
-        results: dict[int, object] = {}
+    def submit(self, compute_one, xe, ke) -> PendingBatch:
+        """Dispatch n coded subtasks without waiting (the asynchronous
+        master's send phase).  Threads mode submits one subtask per worker
+        onto the persistent per-worker pool; simulated mode computes every
+        live worker's result now and lets ``collect`` pick by simulated
+        clock.  Pair with ``collect``; ``run_layer``/``run_pipeline`` do."""
+        worker_times = [0.0] * self.n
 
         def work(i):
             if not np.isfinite(self.straggler.delays[i]):
@@ -171,38 +239,61 @@ class FcdccCluster:
             worker_times[i] = dt + self.straggler.delays[i]
             return i, out
 
-        t1 = time.perf_counter()
+        t_start = time.perf_counter()
+        futures: dict[int, Future] = {}
+        results: dict[int, object] = {}
         if self.mode == "threads":
-            ex = ThreadPoolExecutor(max_workers=n)
-            futs = {ex.submit(work, i) for i in range(n)}
-            pending = set(futs)
-            while len(results) < delta and pending:
-                done, pending = wait(pending, return_when=FIRST_COMPLETED)
+            pools = self._ensure_pools()
+            futures = {i: pools[i].submit(work, i) for i in range(self.n)}
+        else:  # simulated clock: compute all live workers synchronously
+            for i in range(self.n):
+                if np.isfinite(self.straggler.delays[i]):
+                    _, out = work(i)
+                    results[i] = out
+        return PendingBatch(futures, results, worker_times, t_start)
+
+    def collect(self, pending: PendingBatch, delta: int):
+        """Reap the fastest ``delta`` results of a ``submit``; returns
+        ``(results, worker_times, t_compute)``.  Later arrivals are
+        discarded, exactly like the paper's asynchronous collection —
+        straggler subtasks are never joined (queued-but-unstarted ones are
+        cancelled so they don't occupy their worker).  ``worker_times`` is
+        a snapshot: stragglers finishing after return write into the live
+        list, not the one handed back."""
+        results = dict(pending.results)
+        if self.mode == "threads":
+            results = {}
+            outstanding = set(pending.futures.values())
+            while len(results) < delta and outstanding:
+                done, outstanding = wait(outstanding, return_when=FIRST_COMPLETED)
                 for f in done:
                     try:
                         i, out = f.result()
                         results[i] = out
                     except RuntimeError:
                         pass
-            # fastest-delta collected; do NOT join stragglers (the paper's
-            # asynchronous master discards them)
-            t_compute = time.perf_counter() - t1
-            ex.shutdown(wait=False, cancel_futures=True)
-        else:  # simulated clock: compute all, completion = max over chosen
-            for i in range(n):
-                if np.isfinite(self.straggler.delays[i]):
-                    _, out = work(i)
-                    results[i] = out
-            order = sorted(results, key=lambda i: worker_times[i])
+            t_compute = time.perf_counter() - pending.t_start
+            for f in outstanding:  # abandon stragglers, don't join them
+                f.cancel()
+        else:  # completion time = max simulated clock over the chosen delta
+            order = sorted(results, key=lambda i: pending.worker_times[i])
             results = {i: results[i] for i in order[:delta]}
-            t_compute = max(worker_times[i] for i in results) if results else float("inf")
+            t_compute = (
+                max(pending.worker_times[i] for i in results)
+                if results else float("inf")
+            )
 
         if len(results) < delta:
             raise ClusterDegraded(
                 f"only {len(results)} of delta={delta} results; "
-                f"gamma={n - delta} exceeded"
+                f"gamma={self.n - delta} exceeded"
             )
-        return results, worker_times, t_compute
+        return results, list(pending.worker_times), t_compute
+
+    def _collect(self, compute_one, xe, ke, n: int, delta: int):
+        """Submit + collect in one blocking call (the pre-serving API)."""
+        assert n == self.n, (n, self.n)
+        return self.collect(self.submit(compute_one, xe, ke), delta)
 
     # -- one ConvL ----------------------------------------------------------
     def run_layer(self, geo: ConvGeometry, x, k=None, *, coded_filters=None,
@@ -241,9 +332,14 @@ class FcdccCluster:
         t_encode = time.perf_counter() - t0
 
         compute = self.worker_program(layer)
-        # warm the kernel once so per-worker timings measure steady state
-        # (cached: a no-op re-run after the first call with these shapes)
-        jax.block_until_ready(compute(xe[0], ke[0]))
+        # warm the kernel on first sight of these shapes so per-worker
+        # timings measure steady state (skipped once warmed — re-running
+        # would execute a whole discarded subtask, not a cache no-op)
+        wkey = (layer.plan.ell_a, layer.plan.ell_b, layer.geo.stride,
+                tuple(xe.shape), tuple(ke.shape))
+        if wkey not in self._warmed:
+            jax.block_until_ready(compute(xe[0], ke[0]))
+            self._warmed.add(wkey)
 
         results, worker_times, t_compute = self._collect(compute, xe, ke, n, delta)
 
@@ -256,53 +352,71 @@ class FcdccCluster:
                               layer_name or "")
 
     # -- whole network ------------------------------------------------------
+    def run_pipeline_layer(self, idx: int, x) -> tuple:
+        """One ConvL of the loaded pipeline as a full master/worker round:
+        encode inputs, dispatch n coded subtasks against the *resident*
+        coded filters, keep the fastest delta, decode + relu + pool.
+        Returns ``(y, LayerTiming)`` for the batched ``(B, C, H, W)`` input.
+
+        This is the layer-granular step the serving engine interleaves
+        across concurrent request batches (``repro.serving.CodedServer``
+        admits new arrivals exactly at these layer boundaries).
+        """
+        pipe = self.pipeline
+        if pipe is None:
+            raise ValueError("no pipeline loaded; call load_pipeline() first")
+        spec = pipe.specs[idx]
+        delta = spec.plan.delta
+        # the pipeline's own filters, not the name-keyed store: a later
+        # preload/run_layer under a colliding layer name must not swap
+        # in foreign filters under this pipeline's decode
+        ke = pipe.coded_filters[idx]
+
+        t0 = time.perf_counter()
+        xe = jax.block_until_ready(pipe.encoder(idx)(x))
+        t_encode = time.perf_counter() - t0
+
+        compute = pipe.worker_program(idx, over_workers=False)
+        # first sight of these shapes: compile outside the timed collect so
+        # per-worker timings measure steady state.  Once warmed it's skipped
+        # — the serving hot path must not pay a discarded subtask per layer.
+        wkey = (spec.program_key, tuple(xe.shape), tuple(ke.shape))
+        if wkey not in self._warmed:
+            jax.block_until_ready(compute(xe[0], ke[0]))
+            self._warmed.add(wkey)
+        results, worker_times, t_compute = self.collect(
+            self.submit(compute, xe, ke), delta
+        )
+
+        ids = list(results)[:delta]
+        outs = np.stack([np.asarray(results[i]) for i in ids], axis=0)
+        t2 = time.perf_counter()
+        y = jax.block_until_ready(
+            pipe.decoder(idx, tuple(ids))(jax.numpy.asarray(outs))
+        )
+        t_decode = time.perf_counter() - t2
+        return y, LayerTiming(t_encode, t_compute, t_decode, worker_times,
+                              ids, spec.name)
+
     def run_pipeline(self, x, pipeline: CodedPipeline | None = None) -> tuple:
         """Stream a batched ``(B, C, H, W)`` input (or one ``(C, H, W)``
         image) through every ConvL of the loaded pipeline.
 
-        Each layer runs the full master/worker round on the cluster —
-        encode inputs, dispatch n coded subtasks against the *resident*
-        coded filters, keep the fastest delta, decode + relu + pool — and
+        Each layer is one ``run_pipeline_layer`` master/worker round and
         contributes one ``LayerTiming``.  Returns ``(y, [LayerTiming])``.
         """
         if pipeline is not None:
             self.load_pipeline(pipeline)
-        pipe = self.pipeline
-        if pipe is None:
+        if self.pipeline is None:
             raise ValueError("no pipeline loaded; call load_pipeline() first")
 
         squeeze = x.ndim == 3
         if squeeze:
             x = x[None]
         timings = []
-        for idx, spec in enumerate(pipe.specs):
-            delta = spec.plan.delta
-            # the pipeline's own filters, not the name-keyed store: a later
-            # preload/run_layer under a colliding layer name must not swap
-            # in foreign filters under this pipeline's decode
-            ke = pipe.coded_filters[idx]
-
-            t0 = time.perf_counter()
-            xe = jax.block_until_ready(pipe.encoder(idx)(x))
-            t_encode = time.perf_counter() - t0
-
-            compute = pipe.worker_program(idx, over_workers=False)
-            jax.block_until_ready(compute(xe[0], ke[0]))  # steady-state warm
-            results, worker_times, t_compute = self._collect(
-                compute, xe, ke, self.n, delta
-            )
-
-            ids = list(results)[:delta]
-            outs = np.stack([np.asarray(results[i]) for i in ids], axis=0)
-            t2 = time.perf_counter()
-            x = jax.block_until_ready(
-                pipe.decoder(idx, tuple(ids))(jax.numpy.asarray(outs))
-            )
-            t_decode = time.perf_counter() - t2
-            timings.append(
-                LayerTiming(t_encode, t_compute, t_decode, worker_times, ids,
-                            spec.name)
-            )
+        for idx in range(len(self.pipeline.specs)):
+            x, timing = self.run_pipeline_layer(idx, x)
+            timings.append(timing)
         return (x[0] if squeeze else x), timings
 
 

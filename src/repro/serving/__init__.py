@@ -1,0 +1,24 @@
+"""Coded serving engine: continuous-batching inference over a resident
+``CodedPipeline`` (scheduler + engine loop + per-request metrics)."""
+from .engine import CodedServer
+from .metrics import MetricsCollector, RequestRecord, ServingStats, percentile
+from .scheduler import (
+    Request,
+    RequestHandle,
+    RequestQueue,
+    ScheduledBatch,
+    Scheduler,
+)
+
+__all__ = [
+    "CodedServer",
+    "MetricsCollector",
+    "RequestRecord",
+    "ServingStats",
+    "percentile",
+    "Request",
+    "RequestHandle",
+    "RequestQueue",
+    "ScheduledBatch",
+    "Scheduler",
+]

@@ -1,0 +1,250 @@
+"""``CodedServer``: a continuous-batching serving engine over one resident
+``CodedPipeline`` + ``FcdccCluster``.
+
+The paper's deployment model (Sec. IV, Fig. 1) pre-stores coded filters on
+the workers and streams inference through the coded cluster; this module
+turns that into a *server*: concurrent callers ``submit()`` single images,
+a background engine thread assembles them into bucketed batches and
+advances in-flight batches one ConvL at a time through the cluster's
+``run_pipeline_layer`` master/worker rounds, admitting late arrivals at
+every layer boundary.
+
+Two execution paths share the resident pipeline:
+
+  * ``execution="cluster"`` — every layer is a full master/worker round
+    (encode, dispatch n coded subtasks via the cluster's persistent
+    per-worker pool, fastest-delta collect, decode).  Stragglers and dead
+    workers behave exactly as in ``run_pipeline``; this is what
+    ``benchmarks/exp6_serving.py`` measures.
+  * ``execution="direct"`` — survivors are pre-picked from the straggler
+    model (dead workers excluded, slowest gamma dropped) and the whole
+    stack runs through ``CodedPipeline.run_prepared``: no host-side code
+    prep between layers, so decode of layer *i* overlaps encode of layer
+    *i+1* on the device queue.
+
+Batch sizes are padded to the pipeline's ``bucket_sizes``, so jit compiles
+one program per (layer, bucket) — ``warmup()`` pre-traces them all, and
+``CodedPipeline.worker_program_traces`` stays bounded by the bucket count
+no matter how request batch sizes vary.
+"""
+from __future__ import annotations
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import CodedPipeline, build_cnn_pipeline
+from repro.runtime import FcdccCluster, StragglerModel
+
+from .metrics import MetricsCollector, RequestRecord, ServingStats
+from .scheduler import RequestHandle, ScheduledBatch, Scheduler
+
+__all__ = ["CodedServer"]
+
+DEFAULT_BUCKETS = (1, 2, 4, 8)
+
+
+class CodedServer:
+    """Continuous-batching inference server over a resident coded pipeline.
+
+    Owns one ``FcdccCluster`` (persistent per-worker pool, resident coded
+    filters) and one engine thread.  ``submit()`` is thread-safe and
+    returns a ``RequestHandle``; ``stats()`` aggregates per-request
+    metrics.  Use as a context manager or call ``start()``/``shutdown()``.
+    """
+
+    def __init__(self, pipeline: CodedPipeline,
+                 straggler: StragglerModel | None = None, *,
+                 mode: str = "simulated", execution: str = "cluster",
+                 bucket_sizes=None, max_inflight: int = 2,
+                 poll_interval_s: float = 0.005):
+        if execution not in ("cluster", "direct"):
+            raise ValueError(f"unknown execution mode {execution!r}")
+        if pipeline.bucket_sizes is None:
+            pipeline.bucket_sizes = CodedPipeline.normalize_buckets(
+                bucket_sizes if bucket_sizes is not None else DEFAULT_BUCKETS
+            )
+        elif bucket_sizes is not None and \
+                CodedPipeline.normalize_buckets(bucket_sizes) \
+                != pipeline.bucket_sizes:
+            raise ValueError(
+                f"pipeline already bucketed as {pipeline.bucket_sizes}, "
+                f"got bucket_sizes={tuple(bucket_sizes)}"
+            )
+        self.pipeline = pipeline
+        self.execution = execution
+        spec0 = pipeline.specs[0]
+        self.cluster = FcdccCluster(spec0.plan, straggler, mode=mode)
+        self.cluster.load_pipeline(pipeline)
+        self.scheduler = Scheduler(
+            pipeline.pad_to_bucket,
+            max_batch=pipeline.max_batch,
+            max_inflight=max_inflight,
+        )
+        self.metrics = MetricsCollector()
+        self._poll_interval_s = poll_interval_s
+        self._stop = threading.Event()
+        self._drain = True
+        self._thread: threading.Thread | None = None
+        self._prepared = None  # direct-mode survivor plan, built lazily
+        c, h, w = spec0.geo.in_channels, spec0.geo.height, spec0.geo.width
+        self._input_shape = (c, h, w)
+        self._input_dtype = pipeline.coded_filters[0].dtype
+
+    # -- construction helpers ----------------------------------------------
+    @classmethod
+    def from_cnn(cls, name: str, params: dict, n: int, *,
+                 q: int | None = None, default_kab=None, input_hw=None,
+                 straggler: StragglerModel | None = None,
+                 mode: str = "simulated", execution: str = "cluster",
+                 bucket_sizes=None, max_inflight: int = 2) -> "CodedServer":
+        """Compile a named CNN (``lenet5``/``alexnet``/``vgg16``) into a
+        bucketed resident pipeline and wrap a server around it."""
+        pipeline = build_cnn_pipeline(
+            name, params, n, q=q, default_kab=default_kab, input_hw=input_hw,
+            bucket_sizes=(bucket_sizes if bucket_sizes is not None
+                          else DEFAULT_BUCKETS),
+        )
+        return cls(pipeline, straggler, mode=mode, execution=execution,
+                   max_inflight=max_inflight)
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> "CodedServer":
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=self._engine_loop, name="coded-server-engine", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def shutdown(self, *, drain: bool = True, timeout: float = 60.0) -> None:
+        """Stop the engine.  ``drain=True`` (default) finishes queued and
+        in-flight requests first; ``drain=False`` cancels them with a
+        ``RuntimeError``.  Idempotent."""
+        self._drain = drain
+        self._stop.set()
+        thread, self._thread = self._thread, None
+        if thread is not None:
+            with self.scheduler.queue.not_empty:
+                self.scheduler.queue.not_empty.notify_all()
+            thread.join(timeout)
+            if thread.is_alive():
+                raise TimeoutError(f"engine thread not done after {timeout}s")
+        self.cluster.shutdown()
+
+    def __enter__(self) -> "CodedServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    # -- request path --------------------------------------------------------
+    def submit(self, x) -> RequestHandle:
+        """Enqueue one ``(C, H, W)`` image; returns a handle whose
+        ``result()`` blocks for the decoded output.
+
+        Inputs are cast to the pipeline dtype: a stray uint8/float16 request
+        must not re-trace every (layer, bucket) program under a new dtype —
+        the bounded-program contract is shape *and* dtype."""
+        x = jnp.asarray(x, self._input_dtype)
+        if tuple(x.shape) != self._input_shape:
+            raise ValueError(
+                f"request shape {tuple(x.shape)} != pipeline input "
+                f"{self._input_shape}"
+            )
+        if self._thread is None:
+            raise RuntimeError("server not running; call start()")
+        return self.scheduler.submit(x)
+
+    def submit_many(self, xs) -> list[RequestHandle]:
+        return [self.submit(x) for x in xs]
+
+    def warmup(self) -> None:
+        """Pre-trace every (layer, bucket) program by running one zero
+        batch per bucket end-to-end.  After this, serving never jit-compiles
+        (the bounded-program contract) and first-request latency is flat."""
+        for bucket in self.pipeline.bucket_sizes:
+            x = jnp.zeros((bucket,) + self._input_shape, self._input_dtype)
+            if self.execution == "direct":
+                jax.block_until_ready(
+                    self.pipeline.run_prepared(x, self._direct_plan())
+                )
+            else:
+                self.cluster.run_pipeline(x)
+
+    def stats(self) -> ServingStats:
+        return self.metrics.stats()
+
+    # -- engine loop ---------------------------------------------------------
+    def _engine_loop(self) -> None:
+        sched = self.scheduler
+        while True:
+            if self._stop.is_set() and (not self._drain or not sched.has_work()):
+                break
+            # layer boundary: admit late arrivals before advancing anyone
+            sched.admit()
+            batch = sched.next_batch()
+            if batch is None:
+                with sched.queue.not_empty:
+                    if not len(sched.queue) and not self._stop.is_set():
+                        sched.queue.not_empty.wait(self._poll_interval_s)
+                continue
+            try:
+                self._advance(batch)
+            except Exception as err:  # degraded cluster etc: fail the batch
+                sched.retire(batch)
+                for req in batch.requests:
+                    req.finish(error=err)
+        if not self._drain:
+            self.scheduler.cancel_all(RuntimeError("server shut down"))
+
+    def _advance(self, batch: ScheduledBatch) -> None:
+        """Advance one batch — by one ConvL (cluster execution, so other
+        batches and new arrivals interleave at layer boundaries) or through
+        the whole prepared stack (direct execution)."""
+        if self.execution == "direct":
+            batch.x = jax.block_until_ready(
+                self.pipeline.run_prepared(batch.x, self._direct_plan())
+            )
+            batch.layer_idx = len(self.pipeline.specs)
+        else:
+            batch.x, timing = self.cluster.run_pipeline_layer(
+                batch.layer_idx, batch.x
+            )
+            batch.timings.append(timing)
+            batch.layer_idx += 1
+        if batch.layer_idx >= len(self.pipeline.specs):
+            self._complete(batch)
+
+    def _complete(self, batch: ScheduledBatch) -> None:
+        self.scheduler.retire(batch)
+        y = np.asarray(batch.x)
+        for row, req in enumerate(batch.requests):
+            req.finish(result=y[row])
+            self.metrics.record(RequestRecord(
+                request_id=req.request_id,
+                arrival_t=req.arrival_t,
+                start_t=req.start_t,
+                finish_t=req.finish_t,
+                bucket=batch.bucket,
+                batch_real=batch.real,
+            ))
+
+    # -- direct-mode survivor pre-pick ---------------------------------------
+    def _direct_plan(self):
+        """The ``prepare`` plan over pre-picked survivors: dead workers
+        excluded, remaining sorted by injected delay (fastest first) so each
+        layer decodes from the delta best.  Cached — every batch reuses it
+        until the straggler model changes."""
+        delays = self.cluster.straggler.delays
+        key = tuple(np.asarray(delays).tolist())
+        if self._prepared is None or self._prepared[0] != key:
+            alive = [i for i in range(self.cluster.n)
+                     if np.isfinite(delays[i])]
+            alive.sort(key=lambda i: (delays[i], i))
+            self._prepared = (key, self.pipeline.prepare(alive))
+        return self._prepared[1]

@@ -1,0 +1,119 @@
+"""Per-request serving metrics: latency breakdown, percentiles, throughput.
+
+Every request that flows through the ``CodedServer`` leaves one
+``RequestRecord`` (arrival -> batch start -> finish); ``MetricsCollector``
+aggregates them into a ``ServingStats`` with queue-wait / execute /
+end-to-end percentiles and images/s throughput — the numbers
+``benchmarks/exp6_serving.py`` compares against the sequential
+``run_pipeline`` baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Sequence
+
+import numpy as np
+
+__all__ = ["RequestRecord", "ServingStats", "MetricsCollector", "percentile"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestRecord:
+    """Lifecycle timestamps of one served request (``time.perf_counter``)."""
+
+    request_id: int
+    arrival_t: float   # submit() called
+    start_t: float     # its batch began executing layer 0
+    finish_t: float    # result decoded and delivered
+    bucket: int        # padded batch size the request rode in
+    batch_real: int    # real (unpadded) requests in that batch
+
+    @property
+    def queue_wait_s(self) -> float:
+        return self.start_t - self.arrival_t
+
+    @property
+    def execute_s(self) -> float:
+        return self.finish_t - self.start_t
+
+    @property
+    def e2e_s(self) -> float:
+        return self.finish_t - self.arrival_t
+
+
+def percentile(xs: Sequence[float], p: float) -> float:
+    """Linear-interpolated percentile (p in [0, 100]); nan when empty."""
+    if not xs:
+        return float("nan")
+    return float(np.percentile(np.asarray(xs, dtype=np.float64), p))
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingStats:
+    """Aggregate over a set of completed requests."""
+
+    completed: int
+    wall_s: float            # first arrival -> last finish
+    images_per_s: float
+    e2e_p50_s: float
+    e2e_p95_s: float
+    e2e_p99_s: float
+    queue_wait_p50_s: float
+    queue_wait_p95_s: float
+    execute_p50_s: float
+    execute_p95_s: float
+    mean_batch_real: float   # average *real* occupancy of executed buckets
+
+    def summary_line(self) -> str:
+        return (
+            f"{self.completed} reqs in {self.wall_s:.3f}s "
+            f"({self.images_per_s:.1f} img/s) "
+            f"e2e p50/p95/p99 {self.e2e_p50_s*1e3:.1f}/"
+            f"{self.e2e_p95_s*1e3:.1f}/{self.e2e_p99_s*1e3:.1f} ms "
+            f"queue p50 {self.queue_wait_p50_s*1e3:.1f} ms "
+            f"mean batch {self.mean_batch_real:.2f}"
+        )
+
+
+class MetricsCollector:
+    """Thread-safe sink for ``RequestRecord``s (the engine thread writes,
+    callers read a snapshot)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._records: list[RequestRecord] = []
+
+    def record(self, rec: RequestRecord) -> None:
+        with self._lock:
+            self._records.append(rec)
+
+    def records(self) -> list[RequestRecord]:
+        with self._lock:
+            return list(self._records)
+
+    def reset(self) -> None:
+        with self._lock:
+            self._records.clear()
+
+    def stats(self) -> ServingStats:
+        recs = self.records()
+        if not recs:
+            return ServingStats(0, 0.0, 0.0, *([float("nan")] * 7), 0.0)
+        e2e = [r.e2e_s for r in recs]
+        qw = [r.queue_wait_s for r in recs]
+        ex = [r.execute_s for r in recs]
+        wall = max(r.finish_t for r in recs) - min(r.arrival_t for r in recs)
+        return ServingStats(
+            completed=len(recs),
+            wall_s=wall,
+            images_per_s=len(recs) / wall if wall > 0 else float("inf"),
+            e2e_p50_s=percentile(e2e, 50),
+            e2e_p95_s=percentile(e2e, 95),
+            e2e_p99_s=percentile(e2e, 99),
+            queue_wait_p50_s=percentile(qw, 50),
+            queue_wait_p95_s=percentile(qw, 95),
+            execute_p50_s=percentile(ex, 50),
+            execute_p95_s=percentile(ex, 95),
+            mean_batch_real=float(np.mean([r.batch_real for r in recs])),
+        )

@@ -1,0 +1,204 @@
+"""Continuous-batching scheduler for coded CNN inference requests.
+
+The sglang-style serving decomposition, adapted from token iterations to
+ConvL iterations: a thread-safe ``RequestQueue`` admits single-image
+requests, and the ``Scheduler`` assembles them into bucketed
+``ScheduledBatch``es and decides which in-flight batch advances by one
+layer next.
+
+Two properties make this *continuous* rather than static batching:
+
+  * late arrivals are admitted at every **layer boundary** — the engine
+    asks the scheduler for work between layers, so a request that shows up
+    while batch A is on conv3 starts as batch B at conv1 immediately
+    instead of waiting for A to drain;
+  * batch sizes are **bucketed** (padded up to the pipeline's
+    ``bucket_sizes``), so jit compiles one program per (layer, bucket) —
+    a bounded set — never one per observed batch size.
+
+Scheduling policy is deepest-layer-first: finishing an almost-done batch
+frees its requests (latency) before opening a new front (throughput);
+ties break FIFO.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from typing import Callable
+
+import jax.numpy as jnp
+
+__all__ = ["Request", "RequestHandle", "RequestQueue", "ScheduledBatch",
+           "Scheduler"]
+
+
+@dataclasses.dataclass
+class Request:
+    """One in-flight inference request for a single ``(C, H, W)`` image."""
+
+    request_id: int
+    x: jnp.ndarray
+    arrival_t: float
+    done: threading.Event = dataclasses.field(default_factory=threading.Event)
+    result: object = None
+    error: BaseException | None = None
+    start_t: float = float("nan")   # set when its batch starts layer 0
+    finish_t: float = float("nan")
+
+    def finish(self, result=None, error: BaseException | None = None) -> None:
+        self.result = result
+        self.error = error
+        self.finish_t = time.perf_counter()
+        self.done.set()
+
+
+class RequestHandle:
+    """Caller-side future for a submitted request."""
+
+    def __init__(self, request: Request):
+        self._request = request
+
+    @property
+    def request_id(self) -> int:
+        return self._request.request_id
+
+    def done(self) -> bool:
+        return self._request.done.is_set()
+
+    def result(self, timeout: float | None = 60.0):
+        """Block until the request completes; raises its error (e.g. a
+        ``ClusterDegraded``) or ``TimeoutError``.  The default timeout is a
+        fail-fast guard — a wedged scheduler thread surfaces here instead
+        of hanging the caller forever."""
+        if not self._request.done.wait(timeout):
+            raise TimeoutError(
+                f"request {self._request.request_id} not done after {timeout}s"
+            )
+        if self._request.error is not None:
+            raise self._request.error
+        return self._request.result
+
+    @property
+    def latency_s(self) -> float:
+        """End-to-end seconds (nan until done)."""
+        return self._request.finish_t - self._request.arrival_t
+
+
+class RequestQueue:
+    """Thread-safe FIFO with a condition the engine loop can wait on."""
+
+    def __init__(self):
+        # reentrant: the engine holds the condition while checking len()
+        self._lock = threading.RLock()
+        self.not_empty = threading.Condition(self._lock)
+        self._queue: list[Request] = []
+        self._ids = itertools.count()
+
+    def submit(self, x: jnp.ndarray) -> RequestHandle:
+        req = Request(next(self._ids), x, time.perf_counter())
+        with self.not_empty:
+            self._queue.append(req)
+            self.not_empty.notify_all()
+        return RequestHandle(req)
+
+    def pop_up_to(self, k: int) -> list[Request]:
+        with self._lock:
+            taken, self._queue = self._queue[:k], self._queue[k:]
+            return taken
+
+    def drain(self) -> list[Request]:
+        with self._lock:
+            taken, self._queue = self._queue, []
+            return taken
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+
+@dataclasses.dataclass
+class ScheduledBatch:
+    """A bucketed group of requests advancing through the ConvL stack
+    together.  ``x`` is the current activation, ``(bucket, C, H, W)``;
+    rows past ``len(requests)`` are zero padding."""
+
+    requests: list[Request]
+    x: jnp.ndarray
+    bucket: int
+    layer_idx: int = 0
+    timings: list = dataclasses.field(default_factory=list)
+
+    @property
+    def real(self) -> int:
+        return len(self.requests)
+
+
+class Scheduler:
+    """Queue + in-flight set + assembly/advance policy.
+
+    ``pad_to_bucket`` comes from the pipeline so the padded batch sizes
+    match the jit program buckets exactly.  The engine loop drives it:
+    ``admit()`` at each layer boundary, then ``next_batch()`` to pick what
+    advances.
+    """
+
+    def __init__(self, pad_to_bucket: Callable, *, max_batch: int,
+                 max_inflight: int = 2):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.queue = RequestQueue()
+        self.inflight: list[ScheduledBatch] = []
+        self.pad_to_bucket = pad_to_bucket
+        self.max_batch = max_batch
+        self.max_inflight = max_inflight
+
+    def submit(self, x: jnp.ndarray) -> RequestHandle:
+        return self.queue.submit(x)
+
+    def has_work(self) -> bool:
+        return bool(self.inflight) or len(self.queue) > 0
+
+    def admit(self) -> ScheduledBatch | None:
+        """Assemble waiting requests into one new bucketed batch (layer 0)
+        if capacity allows.  Called at every layer boundary — this is the
+        continuous-batching admission point."""
+        if len(self.inflight) >= self.max_inflight:
+            return None
+        reqs = self.queue.pop_up_to(self.max_batch)
+        if not reqs:
+            return None
+        x = jnp.stack([r.x for r in reqs], axis=0)
+        x, real = self.pad_to_bucket(x)
+        assert real == len(reqs)
+        batch = ScheduledBatch(reqs, x, bucket=int(x.shape[0]))
+        now = time.perf_counter()
+        for r in reqs:
+            r.start_t = now
+        self.inflight.append(batch)
+        return batch
+
+    def next_batch(self) -> ScheduledBatch | None:
+        """Deepest-layer-first (FIFO among ties): drain nearly-finished
+        batches before starting fresh ones."""
+        if not self.inflight:
+            return None
+        return max(self.inflight, key=lambda b: b.layer_idx)
+
+    def retire(self, batch: ScheduledBatch) -> None:
+        self.inflight.remove(batch)
+
+    def cancel_all(self, error: BaseException) -> int:
+        """Fail every queued and in-flight request (engine shutdown without
+        drain).  Returns the number of requests cancelled."""
+        cancelled = 0
+        for req in self.queue.drain():
+            req.finish(error=error)
+            cancelled += 1
+        for batch in self.inflight:
+            for req in batch.requests:
+                req.finish(error=error)
+                cancelled += 1
+        self.inflight.clear()
+        return cancelled

@@ -1,0 +1,37 @@
+"""Suite-wide guards.
+
+Per-test watchdog: the serving engine runs scheduler/worker threads, and a
+wedged thread (deadlocked queue condition, never-signalled request event)
+would otherwise hang the whole fast suite.  pytest-timeout isn't in the
+image, so this uses SIGALRM directly — the alarm interrupts the blocked
+main thread and fails just that test; with ``-x`` (the tier-1/ci.sh
+invocation) the run then stops fail-fast.  Tune via REPRO_TEST_TIMEOUT
+(seconds, 0 disables).
+"""
+import os
+import signal
+
+import pytest
+
+TIMEOUT_S = int(os.environ.get("REPRO_TEST_TIMEOUT", "300"))
+
+
+@pytest.fixture(autouse=True)
+def _test_watchdog(request):
+    if TIMEOUT_S <= 0 or not hasattr(signal, "SIGALRM"):
+        yield
+        return
+
+    def on_timeout(signum, frame):
+        raise TimeoutError(
+            f"test exceeded REPRO_TEST_TIMEOUT={TIMEOUT_S}s "
+            f"(hung thread in {request.node.nodeid}?)"
+        )
+
+    old = signal.signal(signal.SIGALRM, on_timeout)
+    signal.alarm(TIMEOUT_S)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)

@@ -235,6 +235,27 @@ def test_resident_filters_not_reused_across_plans():
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
 
 
+def test_relu_pool_odd_spatial_dims():
+    """Odd H/W: the trailing row/column that doesn't fill a pool window is
+    cropped (floor semantics), matching the naive reference."""
+    from repro.core.pipeline import relu_pool
+
+    x = jnp.asarray(RNG.standard_normal((2, 3, 5, 7)), jnp.float32)
+    y = relu_pool(x, 2)
+    assert y.shape == (2, 3, 2, 3)  # 5 -> 4 -> 2, 7 -> 6 -> 3
+    r = np.maximum(np.asarray(x), 0.0)[..., :4, :6]
+    ref = r.reshape(2, 3, 2, 2, 3, 2).max(axis=(-3, -1))
+    np.testing.assert_allclose(np.asarray(y), ref, atol=0)
+    # pool=1 is the identity after relu, odd dims untouched
+    y1 = relu_pool(x, 1)
+    assert y1.shape == x.shape
+    np.testing.assert_allclose(np.asarray(y1), np.maximum(np.asarray(x), 0.0))
+    # pool window larger than the axis: everything cropped away is an error
+    # surface worth pinning — a 3x3 pool on H=5,W=7 keeps floor(5/3), floor(7/3)
+    y3 = relu_pool(x, 3)
+    assert y3.shape == (2, 3, 1, 2)
+
+
 def test_auto_partition_planner_feasible():
     _, layers = CNN_SPECS["alexnet"]
     specs = plan_layers(layers, 113, 12, q=16)

@@ -48,6 +48,21 @@ def test_degraded_raises_then_elastic_recovers():
     assert plan2.delta <= 1  # shrank to a grid the survivor can cover
 
 
+def test_elastic_recovery_threads_mode():
+    """Same elastic path but over real worker threads: dead workers raise
+    inside the persistent per-worker pool and the master re-plans."""
+    d = np.zeros(6)
+    d[:5] = np.inf
+    with pytest.raises(ClusterDegraded):
+        FcdccCluster(PLAN, StragglerModel(d), mode="threads").run_layer(GEO, X, K)
+    y, timing, plan2 = run_layer_elastic(
+        PLAN, GEO, X, K, StragglerModel(d), mode="threads"
+    )
+    np.testing.assert_allclose(np.asarray(y), REF, atol=1e-3)
+    assert plan2.delta <= 1
+    assert timing.used_workers == [5]  # only the survivor contributed
+
+
 def test_fused_worker_matches_loop():
     a = FcdccCluster(PLAN, StragglerModel.none(6), mode="simulated")
     y1, _ = a.run_layer(GEO, X, K)

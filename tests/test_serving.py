@@ -1,0 +1,339 @@
+"""The coded serving engine: CodedServer + scheduler + metrics.
+
+Covers: served results match the pipeline's own output; bucketed batch
+assembly keeps the jit program count bounded by the *bucket* count while
+request batch sizes vary; continuous admission at layer boundaries;
+``run_prepared`` equivalence with ``run``; the cluster's ``submit``/
+``collect`` split (persistent per-worker pool, worker_times snapshot);
+straggler resilience end-to-end through the server; and metrics math.
+"""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CodedPipeline, FcdccPlan
+from repro.core.pipeline import plan_layers
+from repro.models.cnn import ConvL
+from repro.runtime import ClusterDegraded, FcdccCluster, StragglerModel
+from repro.serving import CodedServer, MetricsCollector, RequestRecord, percentile
+
+RNG = np.random.default_rng(0)
+
+STACK = [
+    ConvL("s1", 2, 8, 3, stride=1, padding=1, pool=2),
+    ConvL("s2", 8, 8, 3, padding=1),
+]
+
+
+def _params(layers, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        l.name: jnp.asarray(
+            rng.standard_normal((l.out_ch, l.in_ch, l.kernel, l.kernel))
+            * (l.in_ch * l.kernel**2) ** -0.5,
+            jnp.float32,
+        )
+        for l in layers
+    }
+
+
+def _pipeline(bucket_sizes=(1, 2, 4), n=6, hw=12):
+    params = _params(STACK)
+    specs = plan_layers(STACK, hw, n, default_kab=(2, 4))
+    return CodedPipeline(specs, params, bucket_sizes=bucket_sizes), params
+
+
+def _images(count, hw=12):
+    return [jnp.asarray(RNG.standard_normal((2, hw, hw)), jnp.float32)
+            for _ in range(count)]
+
+
+# -- bucketing ------------------------------------------------------------
+def test_bucketize_and_pad():
+    pipe, _ = _pipeline(bucket_sizes=(1, 2, 4))
+    assert pipe.bucket_sizes == (1, 2, 4)
+    assert pipe.max_batch == 4
+    assert [pipe.bucketize(b) for b in (1, 2, 3, 4)] == [1, 2, 4, 4]
+    with pytest.raises(ValueError, match="exceeds"):
+        pipe.bucketize(5)
+    x = jnp.ones((3, 2, 12, 12))
+    padded, real = pipe.pad_to_bucket(x)
+    assert padded.shape[0] == 4 and real == 3
+    np.testing.assert_array_equal(np.asarray(padded[3]), 0.0)
+    # exact bucket size: no copy, no padding
+    x2 = jnp.ones((2, 2, 12, 12))
+    padded2, real2 = pipe.pad_to_bucket(x2)
+    assert padded2 is x2 and real2 == 2
+
+
+def test_bounded_jit_programs_bucket_count_not_batch_size_count():
+    """The acceptance-criteria contract: after serving many distinct
+    request-batch sizes, the number of jitted program traces is bounded by
+    (layer geometries) x (buckets), NOT by the number of batch sizes."""
+    pipe, _ = _pipeline(bucket_sizes=(1, 2, 4))
+    n_geos = len({(s.program_key, s.geo) for s in pipe.specs})
+    seen_sizes = set()
+    for b in (1, 2, 3, 4, 3, 2, 1):  # 4 distinct sizes, only 3 buckets
+        x = jnp.asarray(RNG.standard_normal((b, 2, 12, 12)), jnp.float32)
+        padded, real = pipe.pad_to_bucket(x)
+        pipe.run(padded)
+        seen_sizes.add(b)
+    assert len(seen_sizes) > len(pipe.bucket_sizes)
+    assert pipe.worker_program_traces <= n_geos * len(pipe.bucket_sizes)
+
+
+# -- run_prepared ---------------------------------------------------------
+def test_run_prepared_matches_run():
+    pipe, _ = _pipeline()
+    x = jnp.asarray(RNG.standard_normal((2, 2, 12, 12)), jnp.float32)
+    ref = np.asarray(pipe.run(x))
+    # shared availability list, any order / superset of delta
+    y1 = np.asarray(pipe.run_prepared(x, worker_ids=[5, 2, 4, 0]))
+    np.testing.assert_allclose(y1, ref, rtol=1e-4, atol=1e-4)
+    # explicit per-layer survivor subsets
+    ids = [(1, 3), (5, 0)]
+    y2 = np.asarray(pipe.run_prepared(x, pipe.prepare(ids)))
+    np.testing.assert_allclose(y2, ref, rtol=1e-4, atol=1e-4)
+    # one prepare plan reused across batches (the serving fast path)
+    plan = pipe.prepare()
+    for _ in range(2):
+        np.testing.assert_allclose(
+            np.asarray(pipe.run_prepared(x, plan)), ref, rtol=1e-4, atol=1e-4
+        )
+    with pytest.raises(ValueError, match="covers"):
+        pipe.run_prepared(x, plan[:1])
+
+
+# -- cluster submit/collect ----------------------------------------------
+def test_submit_collect_split_and_persistent_pool():
+    pipe, _ = _pipeline()
+    cluster = FcdccCluster(pipe.specs[0].plan, StragglerModel.none(6),
+                           mode="threads")
+    cluster.load_pipeline(pipe)
+    x = jnp.asarray(RNG.standard_normal((1, 2, 12, 12)), jnp.float32)
+    y0, _ = cluster.run_pipeline(x)
+    pools = cluster._pools
+    assert pools is not None and len(pools) == 6
+    y1, _ = cluster.run_pipeline(x)
+    assert cluster._pools is pools  # same executors, not per-call ones
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), atol=1e-4)
+    cluster.shutdown()
+    assert cluster._pools is None
+    y2, _ = cluster.run_pipeline(x)  # pools re-created lazily
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y0), atol=1e-4)
+    cluster.shutdown()
+
+
+def test_collect_snapshots_worker_times():
+    """A straggler finishing after collect() must not mutate the returned
+    timing list (the old _collect leaked its live list)."""
+    delays = np.zeros(6)
+    delays[0] = 0.3
+    cluster = FcdccCluster(FcdccPlan(n=6, k_a=2, k_b=4),
+                           StragglerModel(delays), mode="threads")
+    pipe, _ = _pipeline()
+    cluster.load_pipeline(pipe)
+    x = jnp.asarray(RNG.standard_normal((1, 2, 12, 12)), jnp.float32)
+    _, timing = cluster.run_pipeline_layer(0, x)
+    snap = timing.worker_compute_s[0]
+    time.sleep(0.5)  # straggler thread writes its time into the live list
+    assert timing.worker_compute_s[0] == snap == 0.0
+    cluster.shutdown()
+
+
+# -- the server -----------------------------------------------------------
+def test_server_serves_correct_results():
+    pipe, _ = _pipeline()
+    ref_pipe, _ = _pipeline()
+    server = CodedServer(pipe, StragglerModel.none(6), mode="simulated")
+    xs = _images(5)
+    with server:
+        handles = server.submit_many(xs)
+        outs = [h.result(timeout=60.0) for h in handles]
+    for x, y in zip(xs, outs):
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(ref_pipe.run(x)), rtol=1e-4, atol=1e-4
+        )
+    stats = server.stats()
+    assert stats.completed == 5
+    assert stats.e2e_p50_s > 0 and stats.images_per_s > 0
+    assert stats.e2e_p99_s >= stats.e2e_p95_s >= stats.e2e_p50_s
+
+
+def test_server_bounded_programs_after_warmup():
+    pipe, _ = _pipeline(bucket_sizes=(1, 2, 4))
+    server = CodedServer(pipe, StragglerModel.none(6), mode="simulated")
+    server.warmup()
+    traces = pipe.worker_program_traces
+    with server:
+        for burst in (1, 3, 2, 4, 1):
+            handles = server.submit_many(_images(burst))
+            for h in handles:
+                h.result(timeout=60.0)
+    # every request-batch size mapped onto a warmed bucket: zero new traces
+    assert pipe.worker_program_traces == traces
+
+
+def test_server_casts_request_dtype():
+    """A uint8/float16 request is cast to the pipeline dtype at submit —
+    a stray client dtype must not re-trace every (layer, bucket) program."""
+    pipe, _ = _pipeline(bucket_sizes=(1, 2))
+    server = CodedServer(pipe, StragglerModel.none(6), mode="simulated")
+    server.warmup()
+    traces = pipe.worker_program_traces
+    with server:
+        y8 = server.submit(np.zeros((2, 12, 12), np.uint8)).result(timeout=60.0)
+        y16 = server.submit(
+            np.ones((2, 12, 12), np.float16)).result(timeout=60.0)
+    assert y8.shape == y16.shape
+    assert pipe.worker_program_traces == traces
+
+
+def test_server_under_stragglers_and_dead_worker():
+    pipe, _ = _pipeline()
+    ref_pipe, _ = _pipeline()
+    delays = np.zeros(6)
+    delays[1] = 5.0
+    delays[4] = np.inf
+    server = CodedServer(pipe, StragglerModel(delays), mode="simulated")
+    xs = _images(3)
+    with server:
+        outs = [h.result(timeout=60.0) for h in server.submit_many(xs)]
+    for x, y in zip(xs, outs):
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(ref_pipe.run(x)), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_server_threads_mode_returns_before_straggler():
+    pipe, _ = _pipeline()
+    delays = np.zeros(6)
+    delays[2] = 1.0
+    server = CodedServer(pipe, StragglerModel(delays), mode="threads")
+    server.warmup()
+    t0 = time.perf_counter()
+    with server:
+        outs = [h.result(timeout=60.0) for h in server.submit_many(_images(2))]
+    assert len(outs) == 2
+    # fastest-delta collection: both layers finish well before the 1s sleep
+    assert time.perf_counter() - t0 < 1.0
+
+
+def test_server_direct_execution_matches_cluster():
+    pipe, _ = _pipeline()
+    ref_pipe, _ = _pipeline()
+    delays = np.zeros(6)
+    delays[0] = 2.0
+    delays[3] = np.inf
+    server = CodedServer(pipe, StragglerModel(delays), execution="direct")
+    xs = _images(4)
+    with server:
+        outs = [h.result(timeout=60.0) for h in server.submit_many(xs)]
+    for x, y in zip(xs, outs):
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(ref_pipe.run(x)), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_server_late_arrivals_join_new_batch():
+    """Requests arriving while a batch is mid-stack are admitted as a new
+    batch at the next layer boundary, not appended to the running one."""
+    pipe, _ = _pipeline()
+    server = CodedServer(pipe, StragglerModel.none(6), mode="simulated",
+                         max_inflight=2)
+    with server:
+        first = server.submit_many(_images(2))
+        time.sleep(0.01)  # let the first batch start
+        second = server.submit_many(_images(2))
+        for h in (*first, *second):
+            h.result(timeout=60.0)
+    recs = {r.request_id: r for r in server.metrics.records()}
+    assert len(recs) == 4
+    # the late pair rode a different batch start than the early pair
+    starts = {round(recs[h.request_id].start_t, 6) for h in second}
+    early_starts = {round(recs[h.request_id].start_t, 6) for h in first}
+    assert starts.isdisjoint(early_starts)
+
+
+def test_server_degraded_cluster_fails_requests_not_engine():
+    pipe, _ = _pipeline()
+    delays = np.full(6, np.inf)
+    delays[0] = 0.0  # one survivor < delta=2
+    server = CodedServer(pipe, StragglerModel(delays), mode="simulated")
+    with server:
+        h = server.submit(_images(1)[0])
+        with pytest.raises(ClusterDegraded):
+            h.result(timeout=60.0)
+        # the engine survived the failed batch and still rejects bad shapes
+        with pytest.raises(ValueError, match="request shape"):
+            server.submit(jnp.zeros((3, 5, 5)))
+
+
+def test_server_shutdown_without_drain_cancels():
+    pipe, _ = _pipeline()
+    server = CodedServer(pipe, StragglerModel.none(6), mode="simulated")
+    server.start()
+    handles = server.submit_many(_images(2))
+    server.shutdown(drain=False)
+    for h in handles:
+        if not h.done():
+            continue  # may have completed before the stop landed
+        try:
+            h.result(timeout=1.0)
+        except RuntimeError:
+            pass
+    with pytest.raises(RuntimeError, match="not running"):
+        server.submit(_images(1)[0])
+
+
+def test_server_concurrent_clients():
+    pipe, _ = _pipeline()
+    ref_pipe, _ = _pipeline()
+    server = CodedServer(pipe, StragglerModel.none(6), mode="simulated")
+    xs = _images(6)
+    outs = [None] * len(xs)
+    errs = []
+
+    def client(i):
+        try:
+            outs[i] = server.submit(xs[i]).result(timeout=60.0)
+        except BaseException as e:  # surfaced below
+            errs.append(e)
+
+    with server:
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(len(xs))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(60.0)
+    assert not errs
+    for x, y in zip(xs, outs):
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(ref_pipe.run(x)), rtol=1e-4, atol=1e-4
+        )
+
+
+# -- metrics --------------------------------------------------------------
+def test_percentile_and_stats_math():
+    assert percentile([1.0, 2.0, 3.0, 4.0], 50) == pytest.approx(2.5)
+    assert np.isnan(percentile([], 50))
+    mc = MetricsCollector()
+    for i in range(4):
+        mc.record(RequestRecord(
+            request_id=i, arrival_t=float(i), start_t=i + 1.0,
+            finish_t=i + 3.0, bucket=4, batch_real=2,
+        ))
+    s = mc.stats()
+    assert s.completed == 4
+    assert s.queue_wait_p50_s == pytest.approx(1.0)
+    assert s.execute_p50_s == pytest.approx(2.0)
+    assert s.e2e_p50_s == pytest.approx(3.0)
+    assert s.wall_s == pytest.approx(6.0)  # arrival 0 -> finish 6
+    assert s.images_per_s == pytest.approx(4 / 6.0)
+    assert s.mean_batch_real == pytest.approx(2.0)
+    mc.reset()
+    assert mc.stats().completed == 0
