@@ -1,0 +1,117 @@
+"""Experiment 7 (beyond paper): the fused batched Pallas coded-worker kernel.
+
+Times ONE worker's coded subtask — the hot op the cluster dispatches n times
+per layer per batch — under three implementations:
+
+  * ``lax_fused``      — one batched ``lax.conv_general_dilated`` (XLA's own
+    conv lowering; the pre-existing fast path).
+  * ``pallas_unfused`` — the pre-PR ``backend="pallas"`` path: the
+    paper-literal ``ell_a * ell_b`` pairwise loop, each pair a per-image
+    ``conv2d_im2col`` vmapped over the request batch — ``ell_a*ell_b*B``
+    tiny GEMM launches.
+  * ``pallas_fused``   — the fused kernel (``coded_worker_pallas``): the
+    ``ell_a`` coded shares x batch B collapse into the GEMM M dimension,
+    the ``ell_b`` coded filter groups concatenate into N — one im2col +
+    one MXU tile sweep per worker per layer.
+
+Geometries are real per-layer specs from ``plan_layers`` over the paper's
+CNNs (the middle ConvL of each stack at the CPU smoke resolution), swept
+over the serving engine's batch buckets.  ``--smoke`` asserts the fused
+kernel beats the unfused loop on every measured cell.
+
+  PYTHONPATH=src python -m benchmarks.exp7_pallas_worker --smoke
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fcdcc import CodedConv2d
+from repro.core.pipeline import plan_layers
+from repro.models.cnn import CNN_SPECS, input_hw
+
+from .common import emit, timed
+
+VARIANTS = ("lax_fused", "pallas_unfused", "pallas_fused")
+
+
+def _middle_spec(arch: str, n: int, kab):
+    hw0, layers = CNN_SPECS[arch]
+    specs = plan_layers(layers, input_hw(arch, smoke=True), n,
+                        default_kab=kab)
+    return specs[len(specs) // 2]
+
+
+def _worker_variants(spec):
+    return {
+        "lax_fused": CodedConv2d(spec.plan, spec.geo, backend="lax"),
+        "pallas_unfused": CodedConv2d(spec.plan, spec.geo, backend="pallas",
+                                      fused_worker=False),
+        "pallas_fused": CodedConv2d(spec.plan, spec.geo, backend="pallas"),
+    }
+
+
+def time_worker(spec, batch: int, rng) -> dict[str, float]:
+    """Steady-state seconds for one worker's coded subtask per variant."""
+    geo = spec.geo
+    x = jnp.asarray(rng.standard_normal(
+        (batch, geo.in_channels, geo.height, geo.width)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal(
+        (geo.out_channels, geo.in_channels, geo.kernel_h, geo.kernel_w)),
+        jnp.float32)
+    variants = _worker_variants(spec)
+    enc = variants["lax_fused"]  # encode is backend-independent
+    xe = jax.block_until_ready(enc.encode_inputs(x))
+    ke = jax.block_until_ready(enc.encode_filters(k))
+    out = {}
+    ref = None
+    for name, layer in variants.items():
+        fn = jax.jit(layer.worker_compute)
+        y = jax.block_until_ready(fn(xe[0], ke[0]))
+        if ref is None:
+            ref = np.asarray(y)
+        else:  # all three compute the same coded subtask
+            np.testing.assert_allclose(np.asarray(y), ref, atol=1e-3)
+        out[name] = timed(fn, xe[0], ke[0])
+    return out
+
+
+def run(quick: bool = True, buckets=None, assert_fused: bool = False):
+    archs = ("lenet5",) if quick else ("lenet5", "alexnet", "vgg16")
+    buckets = buckets or ((1, 4) if quick else (1, 4, 8))
+    n, kab = 8, (2, 4)
+    rng = np.random.default_rng(0)
+    failures = []
+    for arch in archs:
+        spec = _middle_spec(arch, n, kab)
+        for batch in buckets:
+            ts = time_worker(spec, batch, rng)
+            fused_speedup = ts["pallas_unfused"] / ts["pallas_fused"]
+            for name in VARIANTS:
+                emit(
+                    f"exp7/{arch}/{spec.name}/b{batch}/{name}", ts[name],
+                    f"geo={spec.geo.in_channels}x{spec.geo.height}"
+                    f"->{spec.geo.out_channels} "
+                    f"fused_vs_unfused={fused_speedup:.2f}x "
+                    f"lax_vs_fused={ts['lax_fused']/ts['pallas_fused']:.2f}x",
+                )
+            if fused_speedup <= 1.0:
+                failures.append((arch, batch, round(fused_speedup, 3)))
+    if assert_fused and failures:
+        raise SystemExit(
+            f"fused pallas worker did not beat the unfused loop: {failures}"
+        )
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="all three CNNs + bucket 8")
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick sweep + assert fused beats unfused")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=not args.full, assert_fused=args.smoke)

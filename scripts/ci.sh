@@ -1,18 +1,30 @@
 #!/usr/bin/env bash
 # Fast CI suite: the ROADMAP tier-1 verify command with slow (VGG-sized)
-# cases deselected, then the serving-engine smoke benchmark (exp6), which
-# asserts the continuous-batching server beats sequential run_pipeline
-# under every straggler model.  Extra args are passed through to pytest.
+# cases deselected, then — when no pytest args override the selection —
+# the slow-marked alexnet/vgg16 pallas pipeline parity geometries (the
+# fused coded-worker kernel must match lax on every CNN_SPECS geometry;
+# the fast lenet5 case already ran in the main suite), then the
+# serving-engine smoke benchmark (exp6, asserts the continuous-batching
+# server beats sequential run_pipeline under every straggler model) and
+# the fused pallas-worker smoke benchmark (exp7, asserts the fused kernel
+# beats the unfused per-pair loop).  Extra args are passed through to the
+# main pytest run.
 #
 # Tests run with a per-test watchdog (tests/conftest.py, REPRO_TEST_TIMEOUT
 # seconds) so a hung scheduler/worker thread fails fast instead of wedging
 # the suite; -x stops the run at the first failure.
 #
-#   scripts/ci.sh            # fast suite + serving smoke
-#   scripts/ci.sh -m ""      # include slow cases too
+#   scripts/ci.sh            # fast suite + slow pallas parity + smokes
+#   scripts/ci.sh -m ""      # include all slow cases in the main run
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export REPRO_TEST_TIMEOUT="${REPRO_TEST_TIMEOUT:-300}"
 python -m pytest -x -q -m "not slow" "$@"
+# skip the extra block only when the caller overrides marker selection
+# (e.g. `-m ""` already ran the slow cases in the main suite above)
+if [[ "$*" != *"-m"* ]]; then
+  python -m pytest -x -q -m "slow" tests/test_pipeline.py -k "pallas"
+fi
 python -m benchmarks.exp6_serving --smoke
+python -m benchmarks.exp7_pallas_worker --smoke

@@ -76,15 +76,17 @@ class FcdccPlan:
         return self.n - self.delta
 
 
-def _conv_valid(x, k, stride, backend="lax"):
+def _conv_valid(x, k, stride, backend="lax", interpret=True):
     """VALID conv of one coded block pair: x ([B,]C,H,W) * k (N,C,KH,KW)."""
     batched = x.ndim == 4
     if backend == "pallas":
         from repro.kernels.conv2d.ops import conv2d_im2col
 
         if batched:
-            return jax.vmap(lambda xi: conv2d_im2col(xi, k, stride))(x)
-        return conv2d_im2col(x, k, stride)
+            return jax.vmap(
+                lambda xi: conv2d_im2col(xi, k, stride, interpret=interpret)
+            )(x)
+        return conv2d_im2col(x, k, stride, interpret=interpret)
     y = jax.lax.conv_general_dilated(
         x if batched else x[None],
         k,
@@ -104,13 +106,15 @@ class CodedConv2d:
     """
 
     def __init__(self, plan: FcdccPlan, geo: ConvGeometry, backend: str = "lax",
-                 fused_worker: bool = True):
+                 fused_worker: bool = True, interpret: bool = True):
         if geo.k_a != plan.k_a or geo.k_b != plan.k_b:
             geo = dataclasses.replace(geo, k_a=plan.k_a, k_b=plan.k_b)
         self.plan = plan
         self.geo = geo
         self.backend = backend
         self.fused_worker = fused_worker
+        # pallas-only: True emulates kernels on CPU, False lowers to real TPU
+        self.interpret = interpret
         self.a_code, self.b_code = plan.codes
         # instrumentation: CodedPipeline/tests assert encode-once semantics
         self.filter_encode_calls = 0
@@ -149,16 +153,24 @@ class CodedConv2d:
         fused into ONE batched conv — coded inputs (x the request batch) as
         the batch dim, coded filters concatenated along output channels — a
         single bigger GEMM instead of 4 small ones (set ``fused_worker=False``
-        for the paper-literal loop).
+        for the paper-literal loop).  Both backends take the fused path:
+        ``lax`` as one ``conv_general_dilated``, ``pallas`` as one im2col +
+        one MXU-tiled GEMM (``coded_worker_pallas``).
         """
-        if not self.fused_worker or self.backend == "pallas":
+        if not self.fused_worker:
             outs = []
             for b1 in range(self.plan.ell_a):
                 for b2 in range(self.plan.ell_b):
                     outs.append(
-                        _conv_valid(xe_i[b1], ke_i[b2], self.geo.stride, self.backend)
+                        _conv_valid(xe_i[b1], ke_i[b2], self.geo.stride,
+                                    self.backend, self.interpret)
                     )
             return jnp.stack(outs, axis=0)
+        if self.backend == "pallas":
+            from repro.kernels.conv2d.ops import coded_worker
+
+            return coded_worker(xe_i, ke_i, self.geo.stride,
+                                interpret=self.interpret)
         ea, eb = self.plan.ell_a, self.plan.ell_b
         nb = ke_i.shape[1]
         k_cat = ke_i.reshape((eb * nb,) + ke_i.shape[2:])

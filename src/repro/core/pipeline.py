@@ -154,6 +154,7 @@ class CodedPipeline:
 
     def __init__(self, specs: Sequence[CodedLayerSpec], params: dict, *,
                  backend: str = "lax", fused_worker: bool = True,
+                 interpret: bool = True,
                  bucket_sizes: Sequence[int] | None = None):
         specs = list(specs)
         if not specs:
@@ -164,6 +165,9 @@ class CodedPipeline:
         self.specs = specs
         self.n = ns.pop()
         self.backend = backend
+        # pallas-only: interpret=True emulates the worker kernels on CPU,
+        # False lowers them to Mosaic for real TPU hardware
+        self.interpret = interpret
         # batch-size buckets: callers pad request batches up to one of these
         # sizes (``pad_to_bucket``) so jit compiles a *bounded* set of batch
         # programs — one per (program, bucket), never one per batch size
@@ -171,7 +175,8 @@ class CodedPipeline:
             self.normalize_buckets(bucket_sizes) if bucket_sizes else None
         )
         self.layers = [
-            CodedConv2d(s.plan, s.geo, backend=backend, fused_worker=fused_worker)
+            CodedConv2d(s.plan, s.geo, backend=backend,
+                        fused_worker=fused_worker, interpret=interpret)
             for s in specs
         ]
         # resident coded filters: encoded exactly once, reused every run
@@ -438,6 +443,7 @@ def build_cnn_pipeline(
     input_hw: int | None = None,
     weights: CostWeights = CostWeights(),
     backend: str = "lax",
+    interpret: bool = True,
     bucket_sizes: Sequence[int] | None = None,
 ) -> CodedPipeline:
     """Compile one of the named CNNs (``lenet5``/``alexnet``/``vgg16``) into
@@ -454,5 +460,5 @@ def build_cnn_pipeline(
         per_layer_kab=per_layer_kab,
         weights=weights,
     )
-    return CodedPipeline(specs, params, backend=backend,
+    return CodedPipeline(specs, params, backend=backend, interpret=interpret,
                          bucket_sizes=bucket_sizes)

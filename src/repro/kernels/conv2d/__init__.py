@@ -1,2 +1,2 @@
-from .ops import conv2d_im2col
+from .ops import coded_worker, conv2d_im2col
 from .ref import conv2d_ref

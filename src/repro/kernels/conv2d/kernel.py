@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels.matmul.kernel import matmul_pallas
 
-__all__ = ["conv2d_im2col_pallas"]
+__all__ = ["conv2d_im2col_pallas", "coded_worker_pallas"]
 
 
 def conv2d_im2col_pallas(
@@ -25,19 +25,60 @@ def conv2d_im2col_pallas(
     *,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """``x``: (C, H, W); ``k``: (N, C, KH, KW) -> (N, H', W')."""
+    """``x``: (C, H, W); ``k``: (N, C, KH, KW) -> (N, H', W').
+
+    The degenerate one-share/one-group/one-image case of the fused worker
+    kernel — delegating keeps a single owner for the im2col patch-ordering
+    and GEMM-layout contract."""
     c, h, w = x.shape
     n, c2, kh, kw = k.shape
     assert c == c2
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding)))
+    return coded_worker_pallas(x[None], k[None], stride, interpret=interpret)[0]
+
+
+def coded_worker_pallas(
+    xe: jnp.ndarray,
+    ke: jnp.ndarray,
+    stride: int = 1,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """One worker's entire fused coded subtask as a single MXU tile sweep.
+
+    The paper's Algorithm 4 runs ``ell_a * ell_b`` pairwise convolutions per
+    worker; here they collapse into ONE im2col + ONE Pallas GEMM: the
+    ``ell_a`` coded input shares (x the request batch B) ride the GEMM M
+    dimension and the ``ell_b`` coded filter groups concatenate into the N
+    dimension — one kernel launch per worker per layer instead of
+    ``ell_a * ell_b * B`` tiny unbatched GEMMs.
+
+    ``xe``: coded input shares ``(ell_a, [B,] C, h_hat, Wp)`` — already
+    conv-padded by APCP, so the patch extraction is VALID.
+    ``ke``: coded filter groups ``(ell_b, N/k_b, C, KH, KW)``.
+    Returns ``(ell_a*ell_b, [B,] N/k_b, H'/k_a, W')``, slot
+    ``ell_b * b1 + b2`` (same layout as the unfused loop).
+    """
+    batched = xe.ndim == 5
+    ea = xe.shape[0]
+    b = xe.shape[1] if batched else 1
+    c, hh, wp = xe.shape[-3:]
+    eb, nb, c2, kh, kw = ke.shape
+    assert c == c2, (xe.shape, ke.shape)
+    xin = xe.reshape(ea * b, c, hh, wp)
     patches = jax.lax.conv_general_dilated_patches(
-        x[None],
+        xin,
         filter_shape=(kh, kw),
         window_strides=(stride, stride),
-        padding=((padding, padding), (padding, padding)),
+        padding=((0, 0), (0, 0)),
         dimension_numbers=("NCHW", "OIHW", "NCHW"),
-    )  # (1, C*KH*KW, H', W')
+    )  # (ea*B, C*KH*KW, H', W') — pure data movement, feeds the MXU GEMM
     _, ck, ho, wo = patches.shape
-    lhs = patches[0].reshape(ck, ho * wo).T  # (M, K)
-    rhs = k.reshape(n, ck).T  # (K, N)
-    out = matmul_pallas(lhs, rhs, interpret=interpret)  # (M, N)
-    return out.T.reshape(n, ho, wo)
+    # M = ea*B*H'*W' output pixels, K = C*KH*KW patch, N = eb*(N/k_b)
+    lhs = patches.transpose(0, 2, 3, 1).reshape(ea * b * ho * wo, ck)
+    rhs = ke.reshape(eb * nb, ck).T
+    out = matmul_pallas(lhs, rhs, interpret=interpret)  # (M, eb*nb)
+    y = out.reshape(ea, b, ho, wo, eb, nb)
+    y = jnp.transpose(y, (0, 4, 1, 5, 2, 3)).reshape(ea * eb, b, nb, ho, wo)
+    return y if batched else y[:, 0]

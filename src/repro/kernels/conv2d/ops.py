@@ -1,8 +1,18 @@
-"""Public conv op used by CodedConv2d's ``backend='pallas'`` path."""
-from .kernel import conv2d_im2col_pallas
+"""Public conv ops used by CodedConv2d's ``backend='pallas'`` path.
 
-__all__ = ["conv2d_im2col"]
+``interpret`` is a real knob here (plumbed from the class APIs down to
+``pl.pallas_call``): ``True`` emulates the kernel on CPU (this container),
+``False`` lowers to Mosaic on real TPU hardware.
+"""
+from .kernel import coded_worker_pallas, conv2d_im2col_pallas
+
+__all__ = ["conv2d_im2col", "coded_worker"]
 
 
 def conv2d_im2col(x, k, stride=1, padding=0, *, interpret=True):
     return conv2d_im2col_pallas(x, k, stride, padding, interpret=interpret)
+
+
+def coded_worker(xe, ke, stride=1, *, interpret=True):
+    """Fused batched coded-worker subtask: one im2col + one MXU GEMM."""
+    return coded_worker_pallas(xe, ke, stride, interpret=interpret)

@@ -91,6 +91,8 @@ class LayerTiming:
     encode_s: float
     compute_s: float  # master-visible completion time of the delta-th result
     decode_s: float
+    # per-worker seconds: finite = measured, inf = dead worker, nan =
+    # discarded before finishing (aggregate with ``finished_worker_s``)
     worker_compute_s: list
     used_workers: list
     name: str = ""
@@ -98,6 +100,12 @@ class LayerTiming:
     @property
     def total_s(self):
         return self.encode_s + self.compute_s + self.decode_s
+
+    @property
+    def finished_worker_s(self) -> list:
+        """Times of workers that actually finished — the only ones safe to
+        average (dead = inf and discarded = nan slots are excluded)."""
+        return [t for t in self.worker_compute_s if np.isfinite(t)]
 
 
 class FcdccCluster:
@@ -109,12 +117,15 @@ class FcdccCluster:
     """
 
     def __init__(self, plan: FcdccPlan, straggler: StragglerModel | None = None,
-                 mode: str = "threads", backend: str = "lax"):
+                 mode: str = "threads", backend: str = "lax",
+                 interpret: bool = True):
         assert mode in ("threads", "simulated")
         self.plan = plan
         self.straggler = straggler or StragglerModel.none(plan.n)
         self.mode = mode
         self.backend = backend
+        # pallas-only: True emulates worker kernels on CPU, False -> real TPU
+        self.interpret = interpret
         # persistent caches ------------------------------------------------
         self._coded_layers: dict[tuple, CodedConv2d] = {}
         self._programs: dict[tuple, object] = {}
@@ -178,7 +189,7 @@ class FcdccCluster:
         layer = self._coded_layers.get(key)
         if layer is None:
             layer = self._coded_layers[key] = CodedConv2d(
-                plan, geo, backend=self.backend
+                plan, geo, backend=self.backend, interpret=self.interpret
             )
         return layer
 
@@ -225,8 +236,18 @@ class FcdccCluster:
         master's send phase).  Threads mode submits one subtask per worker
         onto the persistent per-worker pool; simulated mode computes every
         live worker's result now and lets ``collect`` pick by simulated
-        clock.  Pair with ``collect``; ``run_layer``/``run_pipeline`` do."""
-        worker_times = [0.0] * self.n
+        clock.  Pair with ``collect``; ``run_layer``/``run_pipeline`` do.
+
+        ``worker_times`` starts as inf for dead workers and nan for live
+        ones; a worker overwrites its slot only when it finishes.  A
+        ``collect`` snapshot therefore reads inf = dead, nan = discarded
+        before finishing, finite = measured — a dead node can never be
+        mistaken for the fastest one."""
+        worker_times = [
+            float("inf") if not np.isfinite(self.straggler.delays[i])
+            else float("nan")
+            for i in range(self.n)
+        ]
 
         def work(i):
             if not np.isfinite(self.straggler.delays[i]):
@@ -430,17 +451,19 @@ def run_layer_elastic(plan: FcdccPlan, geo: ConvGeometry, x, k,
     (halve k_a or k_b -> smaller delta) and retry on the surviving workers."""
     attempt_plan = plan
     for attempt in range(max_retries + 1):
-        cluster = FcdccCluster(attempt_plan, straggler, mode=mode)
-        try:
-            y, timing = cluster.run_layer(geo, x, k)
-            return y, timing, attempt_plan
-        except ClusterDegraded:
-            k_a, k_b = attempt_plan.k_a, attempt_plan.k_b
-            if k_a >= k_b and k_a > 1:
-                k_a = max(k_a // 2, 1)
-            elif k_b > 1:
-                k_b = max(k_b // 2, 1)
-            else:
-                raise
-            attempt_plan = FcdccPlan(n=plan.n, k_a=k_a, k_b=k_b)
+        # context-managed: each attempt's n single-thread executors are
+        # released on exit instead of leaking until interpreter teardown
+        with FcdccCluster(attempt_plan, straggler, mode=mode) as cluster:
+            try:
+                y, timing = cluster.run_layer(geo, x, k)
+                return y, timing, attempt_plan
+            except ClusterDegraded:
+                k_a, k_b = attempt_plan.k_a, attempt_plan.k_b
+                if k_a >= k_b and k_a > 1:
+                    k_a = max(k_a // 2, 1)
+                elif k_b > 1:
+                    k_b = max(k_b // 2, 1)
+                else:
+                    raise
+                attempt_plan = FcdccPlan(n=plan.n, k_a=k_a, k_b=k_b)
     raise ClusterDegraded("elastic retries exhausted")

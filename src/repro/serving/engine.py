@@ -76,7 +76,11 @@ class CodedServer:
         self.pipeline = pipeline
         self.execution = execution
         spec0 = pipeline.specs[0]
-        self.cluster = FcdccCluster(spec0.plan, straggler, mode=mode)
+        # the cluster runs the pipeline's own worker programs, so it must
+        # share the pipeline's backend (lax / pallas) and interpret knob
+        self.cluster = FcdccCluster(spec0.plan, straggler, mode=mode,
+                                    backend=pipeline.backend,
+                                    interpret=pipeline.interpret)
         self.cluster.load_pipeline(pipeline)
         self.scheduler = Scheduler(
             pipeline.pad_to_bucket,
@@ -99,11 +103,17 @@ class CodedServer:
                  q: int | None = None, default_kab=None, input_hw=None,
                  straggler: StragglerModel | None = None,
                  mode: str = "simulated", execution: str = "cluster",
+                 backend: str = "lax", interpret: bool = True,
                  bucket_sizes=None, max_inflight: int = 2) -> "CodedServer":
         """Compile a named CNN (``lenet5``/``alexnet``/``vgg16``) into a
-        bucketed resident pipeline and wrap a server around it."""
+        bucketed resident pipeline and wrap a server around it.
+
+        ``backend="pallas"`` serves every bucketed batch program through the
+        fused coded-worker Pallas kernel; ``interpret=False`` lowers those
+        kernels to real TPU hardware instead of CPU emulation."""
         pipeline = build_cnn_pipeline(
             name, params, n, q=q, default_kab=default_kab, input_hw=input_hw,
+            backend=backend, interpret=interpret,
             bucket_sizes=(bucket_sizes if bucket_sizes is not None
                           else DEFAULT_BUCKETS),
         )
@@ -124,16 +134,33 @@ class CodedServer:
     def shutdown(self, *, drain: bool = True, timeout: float = 60.0) -> None:
         """Stop the engine.  ``drain=True`` (default) finishes queued and
         in-flight requests first; ``drain=False`` cancels them with a
-        ``RuntimeError``.  Idempotent."""
+        ``RuntimeError``.  Idempotent.
+
+        If the engine thread is still alive after ``timeout``, ``_thread``
+        is kept (so a retry joins it again instead of silently skipping)
+        and all outstanding requests are failed with the ``TimeoutError``
+        — callers blocked on ``result()`` surface the wedged engine
+        instead of hanging until their own timeouts."""
         self._drain = drain
         self._stop.set()
-        thread, self._thread = self._thread, None
+        thread = self._thread
         if thread is not None:
             with self.scheduler.queue.not_empty:
                 self.scheduler.queue.not_empty.notify_all()
             thread.join(timeout)
             if thread.is_alive():
-                raise TimeoutError(f"engine thread not done after {timeout}s")
+                err = TimeoutError(f"engine thread not done after {timeout}s")
+                self.scheduler.cancel_all(err)
+                # release the worker pools even though the engine may still
+                # be wedged on them: a never-retried shutdown must not leak
+                # n executors, and the cluster re-creates pools lazily if
+                # the engine ever resumes
+                self.cluster.shutdown()
+                raise err
+            self._thread = None
+            # a submit that passed the gate while the engine was exiting
+            # enqueued onto a dead engine — fail it rather than strand it
+            self.scheduler.cancel_all(RuntimeError("server shut down"))
         self.cluster.shutdown()
 
     def __enter__(self) -> "CodedServer":
@@ -156,7 +183,10 @@ class CodedServer:
                 f"request shape {tuple(x.shape)} != pipeline input "
                 f"{self._input_shape}"
             )
-        if self._thread is None:
+        # _stop closes the gate the moment shutdown begins (also after a
+        # timed-out shutdown, where _thread is deliberately kept): a late
+        # submit must not enqueue onto an engine that will never serve it
+        if self._thread is None or self._stop.is_set():
             raise RuntimeError("server not running; call start()")
         return self.scheduler.submit(x)
 
@@ -185,8 +215,11 @@ class CodedServer:
         while True:
             if self._stop.is_set() and (not self._drain or not sched.has_work()):
                 break
-            # layer boundary: admit late arrivals before advancing anyone
-            sched.admit()
+            # layer boundary: admit late arrivals until the queue is empty
+            # or every inflight slot is filled — a single admit per
+            # iteration would fill free capacity one layer-round late
+            while sched.admit() is not None:
+                pass
             batch = sched.next_batch()
             if batch is None:
                 with sched.queue.not_empty:
@@ -225,6 +258,11 @@ class CodedServer:
         y = np.asarray(batch.x)
         for row, req in enumerate(batch.requests):
             req.finish(result=y[row])
+            if req.error is not None:
+                # a shutdown-timeout cancellation won the finish race: the
+                # caller saw the error, so this request was not served —
+                # keep it out of the served-request metrics
+                continue
             self.metrics.record(RequestRecord(
                 request_id=req.request_id,
                 arrival_t=req.arrival_t,

@@ -46,12 +46,21 @@ class Request:
     error: BaseException | None = None
     start_t: float = float("nan")   # set when its batch starts layer 0
     finish_t: float = float("nan")
+    _finish_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False
+    )
 
     def finish(self, result=None, error: BaseException | None = None) -> None:
-        self.result = result
-        self.error = error
-        self.finish_t = time.perf_counter()
-        self.done.set()
+        """First writer wins: the engine thread and a shutdown-timeout
+        ``cancel_all`` may race here, and a result delivered just before
+        the cancellation must never be overwritten by it (nor vice versa)."""
+        with self._finish_lock:
+            if self.done.is_set():
+                return
+            self.result = result
+            self.error = error
+            self.finish_t = time.perf_counter()
+            self.done.set()
 
 
 class RequestHandle:
@@ -150,6 +159,10 @@ class Scheduler:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.queue = RequestQueue()
         self.inflight: list[ScheduledBatch] = []
+        # guards ``inflight``: normally only the engine thread mutates it,
+        # but a shutdown whose join timed out calls ``cancel_all`` from the
+        # caller thread while the engine may still be running
+        self._lock = threading.Lock()
         self.pad_to_bucket = pad_to_bucket
         self.max_batch = max_batch
         self.max_inflight = max_inflight
@@ -158,14 +171,17 @@ class Scheduler:
         return self.queue.submit(x)
 
     def has_work(self) -> bool:
-        return bool(self.inflight) or len(self.queue) > 0
+        with self._lock:
+            inflight = bool(self.inflight)
+        return inflight or len(self.queue) > 0
 
     def admit(self) -> ScheduledBatch | None:
         """Assemble waiting requests into one new bucketed batch (layer 0)
         if capacity allows.  Called at every layer boundary — this is the
         continuous-batching admission point."""
-        if len(self.inflight) >= self.max_inflight:
-            return None
+        with self._lock:
+            if len(self.inflight) >= self.max_inflight:
+                return None
         reqs = self.queue.pop_up_to(self.max_batch)
         if not reqs:
             return None
@@ -176,29 +192,37 @@ class Scheduler:
         now = time.perf_counter()
         for r in reqs:
             r.start_t = now
-        self.inflight.append(batch)
+        with self._lock:
+            self.inflight.append(batch)
         return batch
 
     def next_batch(self) -> ScheduledBatch | None:
         """Deepest-layer-first (FIFO among ties): drain nearly-finished
         batches before starting fresh ones."""
-        if not self.inflight:
-            return None
-        return max(self.inflight, key=lambda b: b.layer_idx)
+        with self._lock:
+            if not self.inflight:
+                return None
+            return max(self.inflight, key=lambda b: b.layer_idx)
 
     def retire(self, batch: ScheduledBatch) -> None:
-        self.inflight.remove(batch)
+        with self._lock:
+            if batch in self.inflight:  # may already be gone: a shutdown
+                self.inflight.remove(batch)  # timeout cancel_all'ed it
 
     def cancel_all(self, error: BaseException) -> int:
         """Fail every queued and in-flight request (engine shutdown without
-        drain).  Returns the number of requests cancelled."""
+        drain, or a shutdown whose engine join timed out).  Returns the
+        number of requests cancelled.  ``Request.finish`` is first-writer-
+        wins, so racing the still-running engine can't clobber a result it
+        delivered concurrently."""
+        with self._lock:
+            batches, self.inflight = self.inflight, []
         cancelled = 0
         for req in self.queue.drain():
             req.finish(error=error)
             cancelled += 1
-        for batch in self.inflight:
+        for batch in batches:
             for req in batch.requests:
                 req.finish(error=error)
                 cancelled += 1
-        self.inflight.clear()
         return cancelled

@@ -55,14 +55,44 @@ def test_paper_config_n20():
     np.testing.assert_allclose(np.asarray(y), ref, rtol=5e-2, atol=2e-2)
 
 
-def test_pallas_backend_matches():
-    plan = FcdccPlan(n=4, k_a=2, k_b=4)
-    geo = ConvGeometry(3, 8, 12, 10, 3, 3, 1, 1, 2, 4)
-    x = jnp.asarray(RNG.standard_normal((3, 12, 10)), jnp.float32)
+@pytest.mark.parametrize("n,k_a,k_b,batch,s,p", [
+    (4, 2, 4, None, 1, 1),   # single image (the seed case)
+    (6, 2, 4, 3, 1, 1),      # batched request batch
+    (6, 4, 4, 2, 2, 0),      # stride > 1
+    (8, 4, 8, 2, 2, 2),      # stride > 1 with padding > 0
+    (4, 1, 8, 2, 1, 1),      # degenerate A axis (k_a = 1, ell_a = 1)
+    (4, 8, 1, 2, 1, 0),      # degenerate B axis (k_b = 1, ell_b = 1)
+    (3, 1, 1, 2, 2, 1),      # fully degenerate (single coded pair)
+])
+def test_pallas_backend_matches(n, k_a, k_b, batch, s, p):
+    """The fused pallas worker (one im2col + one MXU GEMM per subtask)
+    decodes identically to the fused lax path over batches, strides,
+    padding, and degenerate code axes."""
+    plan = FcdccPlan(n=n, k_a=k_a, k_b=k_b)
+    geo = ConvGeometry(3, 8, 13, 11, 3, 3, s, p, k_a, k_b)
+    shape = (3, 13, 11) if batch is None else (batch, 3, 13, 11)
+    x = jnp.asarray(RNG.standard_normal(shape), jnp.float32)
     k = jnp.asarray(RNG.standard_normal((8, 3, 3, 3)), jnp.float32)
     y_lax = CodedConv2d(plan, geo, backend="lax").run_simulated(x, k)
     y_pal = CodedConv2d(plan, geo, backend="pallas").run_simulated(x, k)
+    assert y_pal.shape == y_lax.shape
     np.testing.assert_allclose(np.asarray(y_lax), np.asarray(y_pal), atol=1e-3)
+
+
+def test_pallas_fused_matches_unfused_loop():
+    """Fused single-GEMM worker == the paper-literal ell_a*ell_b pairwise
+    loop on the same coded shares (both pallas, batched)."""
+    plan = FcdccPlan(n=6, k_a=2, k_b=4)
+    geo = ConvGeometry(3, 8, 13, 11, 3, 3, 1, 1, 2, 4)
+    x = jnp.asarray(RNG.standard_normal((3, 3, 13, 11)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((8, 3, 3, 3)), jnp.float32)
+    fused = CodedConv2d(plan, geo, backend="pallas")
+    loop = CodedConv2d(plan, geo, backend="pallas", fused_worker=False)
+    xe, ke = fused.encode_inputs(x), fused.encode_filters(k)
+    yf = fused.worker_compute(xe[0], ke[0])
+    yl = loop.worker_compute(xe[0], ke[0])
+    assert yf.shape == yl.shape  # (ell_a*ell_b, B, N/k_b, H'/k_a, W')
+    np.testing.assert_allclose(np.asarray(yf), np.asarray(yl), atol=1e-4)
 
 
 @settings(max_examples=15, deadline=None)

@@ -270,6 +270,32 @@ def test_auto_partition_planner_feasible():
         hw = s.out_hw
 
 
+@pytest.mark.parametrize("arch,hw,kab", [
+    ("lenet5", 20, (2, 4)),
+    pytest.param("alexnet", 51, (2, 4), marks=pytest.mark.slow),
+    pytest.param("vgg16", 32, (2, 4), marks=pytest.mark.slow),
+])
+def test_pipeline_pallas_matches_lax(arch, hw, kab):
+    """backend="pallas" CodedPipeline.run / run_prepared == backend="lax"
+    for every CNN_SPECS geometry, batched, with the jitted worker-program
+    traces bounded by (distinct geometries) x (buckets) — the fused pallas
+    worker keeps the serving engine's bounded-program contract."""
+    params = init_cnn(arch, jax.random.PRNGKey(0))
+    specs = plan_layers(CNN_SPECS[arch][1], hw, 6, default_kab=kab)
+    c0 = CNN_SPECS[arch][1][0].in_ch
+    x = jnp.asarray(RNG.standard_normal((2, c0, hw, hw)), jnp.float32)
+    ref = np.asarray(CodedPipeline(specs, params).run(x))
+    pal = CodedPipeline(specs, params, backend="pallas", bucket_sizes=(2,))
+    y = np.asarray(pal.run(x))
+    assert y.shape == ref.shape
+    np.testing.assert_allclose(y, ref, rtol=5e-3, atol=5e-3)
+    # the serving fast path lowers through the same fused pallas programs
+    yp = np.asarray(pal.run_prepared(x, worker_ids=[5, 1, 3, 0]))
+    np.testing.assert_allclose(yp, ref, rtol=5e-3, atol=5e-3)
+    n_geos = len({(s.program_key, s.geo) for s in pal.specs})
+    assert pal.worker_program_traces <= n_geos * len(pal.bucket_sizes)
+
+
 @pytest.mark.slow
 def test_vgg16_pipeline_batch():
     params = init_cnn("vgg16", jax.random.PRNGKey(1))

@@ -69,3 +69,63 @@ def test_fused_worker_matches_loop():
     layer_loop = FcdccCluster(PLAN, StragglerModel.none(6), mode="simulated")
     y2, _ = layer_loop.run_layer(GEO, X, K)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+
+def test_dead_and_discarded_worker_times():
+    """Dead workers report inf, workers discarded before finishing report
+    nan — neither is mistakable for a fast node's 0.0 (the seed bug)."""
+    d = np.zeros(6)
+    d[0] = np.inf            # dead
+    cl = FcdccCluster(PLAN, StragglerModel(d), mode="simulated")
+    y, t = cl.run_layer(GEO, X, K)
+    np.testing.assert_allclose(np.asarray(y), REF, atol=1e-3)
+    assert t.worker_compute_s[0] == float("inf")
+    assert all(np.isfinite(t.worker_compute_s[i]) for i in t.used_workers)
+    # finished_worker_s is the aggregation-safe view (no inf/nan)
+    assert all(np.isfinite(v) for v in t.finished_worker_s)
+    assert len(t.finished_worker_s) == 5
+
+    # threads mode: a slow straggler is discarded before finishing -> nan
+    d2 = np.zeros(6)
+    d2[1] = np.inf           # dead
+    d2[2] = 1.0              # straggler, still sleeping at collect
+    cl2 = FcdccCluster(PLAN, StragglerModel(d2), mode="threads")
+    y2, t2 = cl2.run_layer(GEO, X, K)
+    np.testing.assert_allclose(np.asarray(y2), REF, atol=1e-3)
+    assert t2.worker_compute_s[1] == float("inf")
+    assert np.isnan(t2.worker_compute_s[2])
+    assert all(np.isfinite(v) for v in t2.finished_worker_s)
+    cl2.shutdown()
+
+
+def test_elastic_retries_release_worker_pools(monkeypatch):
+    """Every per-attempt cluster of run_layer_elastic must release its n
+    single-thread executors (the seed leaked them per retry)."""
+    import repro.runtime.cluster as rc
+
+    created = []
+    orig_cluster = rc.FcdccCluster
+
+    class Recording(orig_cluster):
+        def __init__(self, *a, **kw):
+            super().__init__(*a, **kw)
+            created.append(self)
+
+    monkeypatch.setattr(rc, "FcdccCluster", Recording)
+    d = np.zeros(6)
+    d[:5] = np.inf
+    y, _, plan2 = rc.run_layer_elastic(
+        PLAN, GEO, X, K, StragglerModel(d), mode="threads"
+    )
+    np.testing.assert_allclose(np.asarray(y), REF, atol=1e-3)
+    assert len(created) >= 2          # at least one degraded attempt + retry
+    assert all(c._pools is None for c in created)  # all pools shut down
+
+
+def test_cluster_pallas_backend_run_layer():
+    """The cluster's per-worker dispatch path lowers through the fused
+    pallas worker kernel and decodes identically to lax."""
+    cl = FcdccCluster(PLAN, StragglerModel.none(6), mode="simulated",
+                      backend="pallas")
+    y, _ = cl.run_layer(GEO, X, K)
+    np.testing.assert_allclose(np.asarray(y), REF, atol=1e-3)

@@ -129,7 +129,9 @@ def test_submit_collect_split_and_persistent_pool():
 
 def test_collect_snapshots_worker_times():
     """A straggler finishing after collect() must not mutate the returned
-    timing list (the old _collect leaked its live list)."""
+    timing list (the old _collect leaked its live list).  The discarded
+    straggler's slot is nan — NOT 0.0, which would be indistinguishable
+    from the fastest node."""
     delays = np.zeros(6)
     delays[0] = 0.3
     cluster = FcdccCluster(FcdccPlan(n=6, k_a=2, k_b=4),
@@ -138,9 +140,10 @@ def test_collect_snapshots_worker_times():
     cluster.load_pipeline(pipe)
     x = jnp.asarray(RNG.standard_normal((1, 2, 12, 12)), jnp.float32)
     _, timing = cluster.run_pipeline_layer(0, x)
-    snap = timing.worker_compute_s[0]
+    assert np.isnan(timing.worker_compute_s[0])  # unfinished at collect
     time.sleep(0.5)  # straggler thread writes its time into the live list
-    assert timing.worker_compute_s[0] == snap == 0.0
+    assert np.isnan(timing.worker_compute_s[0])  # snapshot unchanged
+    assert 0 not in timing.used_workers
     cluster.shutdown()
 
 
@@ -287,6 +290,101 @@ def test_server_shutdown_without_drain_cancels():
             pass
     with pytest.raises(RuntimeError, match="not running"):
         server.submit(_images(1)[0])
+
+
+def test_server_shutdown_timeout_keeps_thread_and_cancels():
+    """A join timeout must leave ``_thread`` set (so a retry joins again
+    instead of silently skipping) and fail outstanding requests fast."""
+    pipe, _ = _pipeline()
+    server = CodedServer(pipe, StragglerModel.none(6), mode="simulated")
+    gate = threading.Event()
+    orig = server.cluster.run_pipeline_layer
+
+    def wedged_layer(idx, x):
+        gate.wait(30.0)  # engine blocks here until the test releases it
+        return orig(idx, x)
+
+    server.cluster.run_pipeline_layer = wedged_layer
+    server.start()
+    h = server.submit(_images(1)[0])
+    time.sleep(0.05)  # let the engine pick up the batch and block
+    with pytest.raises(TimeoutError):
+        server.shutdown(timeout=0.2)
+    assert server._thread is not None  # a retry will re-join, not skip
+    with pytest.raises(TimeoutError):  # request cancelled, caller not hung
+        h.result(timeout=5.0)
+    # the gate is closed: no new request may enqueue onto the wedged engine
+    with pytest.raises(RuntimeError, match="not running"):
+        server.submit(_images(1)[0])
+    # the cancelled request must not be counted as served
+    assert server.stats().completed == 0
+    gate.set()  # un-wedge; the retry drains and joins cleanly
+    server.shutdown(timeout=30.0)
+    assert server._thread is None
+
+
+def test_engine_admits_up_to_capacity_per_boundary():
+    """With free inflight slots and a deep queue, the engine fills ALL
+    slots at one layer boundary — the seed admitted one batch per
+    iteration, filling capacity one layer-round late."""
+    pipe, _ = _pipeline(bucket_sizes=(1,))
+    server = CodedServer(pipe, StragglerModel.none(6), mode="simulated",
+                         max_inflight=2)
+    inflight_at_advance = []
+    orig = server.cluster.run_pipeline_layer
+
+    def spy(idx, x):
+        inflight_at_advance.append(len(server.scheduler.inflight))
+        return orig(idx, x)
+
+    server.cluster.run_pipeline_layer = spy
+    # queue two single-image batches BEFORE the engine starts: the first
+    # boundary sees both waiting with both slots free
+    handles = [server.scheduler.queue.submit(x) for x in _images(2)]
+    with server:
+        for h in handles:
+            h.result(timeout=60.0)
+    assert inflight_at_advance[0] == 2  # both admitted before any advance
+
+
+def test_request_finish_first_writer_wins():
+    """A shutdown-timeout cancel_all races the still-running engine; a
+    result delivered first must survive the late cancellation (and a
+    cancellation delivered first must survive a late result)."""
+    from repro.serving.scheduler import Scheduler
+
+    sched = Scheduler(lambda x: (x, x.shape[0]), max_batch=1)
+    h1 = sched.submit(jnp.zeros((2, 12, 12)))
+    h2 = sched.submit(jnp.zeros((2, 12, 12)))
+    b1, b2 = sched.admit(), sched.admit()
+    b1.requests[0].finish(result="done")     # engine completed b1 ...
+    assert sched.cancel_all(TimeoutError("wedged")) == 2  # ... then cancel
+    assert h1.result(timeout=1.0) == "done"  # result not clobbered
+    with pytest.raises(TimeoutError):
+        h2.result(timeout=1.0)
+    b2.requests[0].finish(result="late")     # engine finishes b2 after all
+    with pytest.raises(TimeoutError):        # cancellation not clobbered
+        h2.result(timeout=1.0)
+    assert not sched.has_work()
+
+
+def test_server_pallas_backend_serves_matching_results():
+    """End-to-end serving over the fused pallas worker kernel: the engine's
+    bucketed batch programs run the custom MXU path and decode to the same
+    outputs as the lax pipeline."""
+    params = _params(STACK)
+    specs = plan_layers(STACK, 12, 6, default_kab=(2, 4))
+    pal = CodedPipeline(specs, params, backend="pallas", bucket_sizes=(1, 2))
+    ref_pipe, _ = _pipeline(bucket_sizes=(1, 2))
+    server = CodedServer(pal, StragglerModel.none(6), mode="simulated")
+    assert server.cluster.backend == "pallas"
+    xs = _images(3)
+    with server:
+        outs = [h.result(timeout=120.0) for h in server.submit_many(xs)]
+    for x, y in zip(xs, outs):
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(ref_pipe.run(x)), rtol=1e-3, atol=1e-3
+        )
 
 
 def test_server_concurrent_clients():
