@@ -14,7 +14,7 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sizes (slow)")
-    ap.add_argument("--only", default=None, help="comma list: exp1..exp7,roofline")
+    ap.add_argument("--only", default=None, help="comma list: exp1..exp8,roofline")
     ap.add_argument("--batch", type=int, default=4,
                     help="batch size for the coded-pipeline sections (exp1/exp4)")
     args = ap.parse_args()
@@ -29,6 +29,7 @@ def main() -> None:
         exp5_partition_opt,
         exp6_serving,
         exp7_pallas_worker,
+        exp8_multimodel,
         roofline_report,
     )
 
@@ -40,6 +41,7 @@ def main() -> None:
         "exp5": exp5_partition_opt.run,
         "exp6": exp6_serving.run,
         "exp7": exp7_pallas_worker.run,
+        "exp8": exp8_multimodel.run,
         "roofline": roofline_report.run,
     }
     print("name,us_per_call,derived")

@@ -5,10 +5,12 @@
 # fused coded-worker kernel must match lax on every CNN_SPECS geometry;
 # the fast lenet5 case already ran in the main suite), then the
 # serving-engine smoke benchmark (exp6, asserts the continuous-batching
-# server beats sequential run_pipeline under every straggler model) and
-# the fused pallas-worker smoke benchmark (exp7, asserts the fused kernel
-# beats the unfused per-pair loop).  Extra args are passed through to the
-# main pytest run.
+# server beats sequential run_pipeline under every straggler model), the
+# fused pallas-worker smoke benchmark (exp7, asserts the fused kernel
+# beats the unfused per-pair loop) and the multi-model serving smoke
+# benchmark (exp8, asserts two models on one shared coded pool beat two
+# isolated split-pool servers on aggregate throughput under stragglers).
+# Extra args are passed through to the main pytest run.
 #
 # Tests run with a per-test watchdog (tests/conftest.py, REPRO_TEST_TIMEOUT
 # seconds) so a hung scheduler/worker thread fails fast instead of wedging
@@ -28,3 +30,4 @@ if [[ "$*" != *"-m"* ]]; then
 fi
 python -m benchmarks.exp6_serving --smoke
 python -m benchmarks.exp7_pallas_worker --smoke
+python -m benchmarks.exp8_multimodel --smoke

@@ -202,6 +202,24 @@ class CodedPipeline:
 
     # -- introspection -----------------------------------------------------
     @property
+    def input_shape(self) -> tuple[int, int, int]:
+        """Per-image ``(C, H, W)`` the first layer expects."""
+        spec0 = self.specs[0]
+        return (spec0.geo.in_channels, spec0.geo.height, spec0.geo.width)
+
+    @property
+    def input_dtype(self):
+        """Request dtype: everything is cast to the coded-filter dtype so a
+        stray client dtype can never grow the jit program cache."""
+        return self.coded_filters[0].dtype
+
+    @property
+    def num_geometries(self) -> int:
+        """Distinct (program key, geometry) pairs — with bucketing, the jit
+        trace count is bounded by ``num_geometries * len(bucket_sizes)``."""
+        return len({(s.program_key, s.geo) for s in self.specs})
+
+    @property
     def filter_encode_calls(self) -> int:
         """Total ``encode_filters`` invocations across layers (== number of
         layers when the encode-once contract holds)."""

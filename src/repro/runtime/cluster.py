@@ -27,7 +27,13 @@ Entry points:
     a whole CNN ConvL stack (a ``repro.core.pipeline.CodedPipeline`` with
     resident coded filters) through the cluster for batched
     ``(B, C, H, W)`` inputs, returning the output plus per-layer
-    ``LayerTiming``.
+    ``LayerTiming``.  Pipelines are *namespaced*: several models (e.g.
+    lenet5 + alexnet under different ``(k_a, k_b)`` plans) stay resident
+    on one shared worker pool at once — ``load_pipeline(pipe, name)`` to
+    register, ``model=`` on the run entry points to select.  Resident
+    filters and jit program caches are keyed per namespace, so two
+    pipelines with colliding layer names can never serve each other's
+    filters or programs.
   * elastic recovery: if more than gamma workers fail outright, the master
     re-plans with a smaller (k_a, k_b) grid (fewer subtasks) and re-runs —
     the framework-level restart path.
@@ -133,8 +139,12 @@ class FcdccCluster:
         # layer replaces its entry rather than accumulating), guarded by the
         # filter-code key so filters encoded under one code never serve a
         # different plan's decode.  Entry: (code_key, coded_filters, src).
+        # Pipeline layers live under "model/layer" namespaced keys so two
+        # models with the same layer names never collide.
         self._resident: dict[str, tuple] = {}
-        self.pipeline: CodedPipeline | None = None
+        # registered pipelines by model name (insertion-ordered: the first
+        # one is the default for single-model callers)
+        self.pipelines: dict[str, CodedPipeline] = {}
         # persistent worker pool: one single-thread executor per worker,
         # created lazily on first threads-mode dispatch (see _ensure_pools)
         self._pools: list[ThreadPoolExecutor] | None = None
@@ -220,15 +230,49 @@ class FcdccCluster:
         self._resident[name] = (self._filter_code_key(plan, geo), ke, k)
         return ke
 
-    def load_pipeline(self, pipeline: CodedPipeline) -> None:
-        """Adopt a compiled ``CodedPipeline``: its (already encoded, exactly
-        once) coded filters become resident on this cluster's workers."""
+    def load_pipeline(self, pipeline: CodedPipeline,
+                      name: str = "default") -> None:
+        """Adopt a compiled ``CodedPipeline`` under the model namespace
+        ``name``: its (already encoded, exactly once) coded filters become
+        resident on this cluster's workers as ``"{name}/{layer}"`` entries.
+        Several pipelines coexist on the one shared pool; re-registering a
+        name replaces its pipeline and resident filters."""
         if pipeline.n != self.n:
             raise ValueError(f"pipeline targets n={pipeline.n}, cluster has n={self.n}")
-        self.pipeline = pipeline
+        # replacing a model drops ALL of its old entries first: a v2 with
+        # fewer layers must not leave v1 filters reachable under the name
+        prefix = f"{name}/"
+        for stale in [k for k in self._resident if k.startswith(prefix)]:
+            del self._resident[stale]
+        self.pipelines[name] = pipeline
         for spec, ke in zip(pipeline.specs, pipeline.coded_filters):
             key = self._filter_code_key(spec.plan, spec.geo)
-            self._resident[spec.name] = (key, ke, pipeline)
+            self._resident[f"{name}/{spec.name}"] = (key, ke, pipeline)
+
+    @property
+    def pipeline(self) -> CodedPipeline | None:
+        """The default (first-registered) pipeline, for single-model
+        callers; None when nothing is loaded."""
+        return next(iter(self.pipelines.values()), None)
+
+    def get_pipeline(self, model: str | None = None) -> CodedPipeline:
+        """Resolve a registered pipeline.  ``model=None`` means "the only
+        one" — ambiguous (and an error) once several models are loaded."""
+        if not self.pipelines:
+            raise ValueError("no pipeline loaded; call load_pipeline() first")
+        if model is None:
+            if len(self.pipelines) > 1:
+                raise ValueError(
+                    f"{len(self.pipelines)} pipelines loaded "
+                    f"({sorted(self.pipelines)}); pass model="
+                )
+            return next(iter(self.pipelines.values()))
+        try:
+            return self.pipelines[model]
+        except KeyError:
+            raise ValueError(
+                f"unknown model {model!r}; loaded: {sorted(self.pipelines)}"
+            ) from None
 
     # -- fastest-delta collection ------------------------------------------
     def submit(self, compute_one, xe, ke) -> PendingBatch:
@@ -373,19 +417,18 @@ class FcdccCluster:
                               layer_name or "")
 
     # -- whole network ------------------------------------------------------
-    def run_pipeline_layer(self, idx: int, x) -> tuple:
-        """One ConvL of the loaded pipeline as a full master/worker round:
+    def run_pipeline_layer(self, idx: int, x, model: str | None = None) -> tuple:
+        """One ConvL of a loaded pipeline as a full master/worker round:
         encode inputs, dispatch n coded subtasks against the *resident*
         coded filters, keep the fastest delta, decode + relu + pool.
         Returns ``(y, LayerTiming)`` for the batched ``(B, C, H, W)`` input.
 
         This is the layer-granular step the serving engine interleaves
-        across concurrent request batches (``repro.serving.CodedServer``
-        admits new arrivals exactly at these layer boundaries).
+        across concurrent request batches — of all registered models —
+        (``repro.serving.CodedServer`` admits new arrivals exactly at these
+        layer boundaries).  ``model`` selects the pipeline namespace.
         """
-        pipe = self.pipeline
-        if pipe is None:
-            raise ValueError("no pipeline loaded; call load_pipeline() first")
+        pipe = self.get_pipeline(model)
         spec = pipe.specs[idx]
         delta = spec.plan.delta
         # the pipeline's own filters, not the name-keyed store: a later
@@ -419,24 +462,29 @@ class FcdccCluster:
         return y, LayerTiming(t_encode, t_compute, t_decode, worker_times,
                               ids, spec.name)
 
-    def run_pipeline(self, x, pipeline: CodedPipeline | None = None) -> tuple:
+    def run_pipeline(self, x, pipeline: CodedPipeline | None = None,
+                     model: str | None = None) -> tuple:
         """Stream a batched ``(B, C, H, W)`` input (or one ``(C, H, W)``
-        image) through every ConvL of the loaded pipeline.
+        image) through every ConvL of a loaded pipeline (``model`` selects
+        the namespace; passing ``pipeline`` registers it first).
 
         Each layer is one ``run_pipeline_layer`` master/worker round and
         contributes one ``LayerTiming``.  Returns ``(y, [LayerTiming])``.
         """
         if pipeline is not None:
-            self.load_pipeline(pipeline)
-        if self.pipeline is None:
-            raise ValueError("no pipeline loaded; call load_pipeline() first")
+            # an explicitly passed pipeline is never ambiguous: it runs
+            # under its own (or the default) namespace even when other
+            # models are already resident
+            model = model if model is not None else "default"
+            self.load_pipeline(pipeline, model)
+        pipe = self.get_pipeline(model)
 
         squeeze = x.ndim == 3
         if squeeze:
             x = x[None]
         timings = []
-        for idx in range(len(self.pipeline.specs)):
-            x, timing = self.run_pipeline_layer(idx, x)
+        for idx in range(len(pipe.specs)):
+            x, timing = self.run_pipeline_layer(idx, x, model)
             timings.append(timing)
         return (x[0] if squeeze else x), timings
 

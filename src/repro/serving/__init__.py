@@ -1,8 +1,11 @@
-"""Coded serving engine: continuous-batching inference over a resident
-``CodedPipeline`` (scheduler + engine loop + per-request metrics)."""
+"""Coded serving engine: continuous-batching inference over resident
+``CodedPipeline``s — multi-model scheduler + engine loop + per-request
+metrics + stdlib HTTP front-end."""
 from .engine import CodedServer
+from .frontend import ServingFrontend
 from .metrics import MetricsCollector, RequestRecord, ServingStats, percentile
 from .scheduler import (
+    MultiScheduler,
     Request,
     RequestHandle,
     RequestQueue,
@@ -12,10 +15,12 @@ from .scheduler import (
 
 __all__ = [
     "CodedServer",
+    "ServingFrontend",
     "MetricsCollector",
     "RequestRecord",
     "ServingStats",
     "percentile",
+    "MultiScheduler",
     "Request",
     "RequestHandle",
     "RequestQueue",

@@ -1,5 +1,5 @@
-"""``CodedServer``: a continuous-batching serving engine over one resident
-``CodedPipeline`` + ``FcdccCluster``.
+"""``CodedServer``: a continuous-batching, multi-model serving engine over
+resident ``CodedPipeline``s sharing one ``FcdccCluster``.
 
 The paper's deployment model (Sec. IV, Fig. 1) pre-stores coded filters on
 the workers and streams inference through the coded cluster; this module
@@ -9,26 +9,38 @@ advances in-flight batches one ConvL at a time through the cluster's
 ``run_pipeline_layer`` master/worker rounds, admitting late arrivals at
 every layer boundary.
 
-Two execution paths share the resident pipeline:
+Several models share the one persistent worker pool: ``register_model``
+loads each ``CodedPipeline`` (e.g. lenet5 + alexnet under different
+``(k_a, k_b)`` plans) into its own cluster namespace — resident coded
+filters and jit program caches never collide — and each model gets its own
+scheduler (queue, buckets, in-flight capacity).  The engine picks work
+fair-share: a rotating round-robin sweep across the models with in-flight
+work, deepest batch first within a model, with equal-depth batches of one
+model coalesced back into full buckets when capacity allows.  Constructing the server with a
+single pipeline is the unchanged single-model API (one model named
+``"default"``).
+
+Two execution paths share the resident pipelines:
 
   * ``execution="cluster"`` — every layer is a full master/worker round
     (encode, dispatch n coded subtasks via the cluster's persistent
     per-worker pool, fastest-delta collect, decode).  Stragglers and dead
     workers behave exactly as in ``run_pipeline``; this is what
-    ``benchmarks/exp6_serving.py`` measures.
+    ``benchmarks/exp6_serving.py`` and ``exp8_multimodel.py`` measure.
   * ``execution="direct"`` — survivors are pre-picked from the straggler
     model (dead workers excluded, slowest gamma dropped) and the whole
     stack runs through ``CodedPipeline.run_prepared``: no host-side code
     prep between layers, so decode of layer *i* overlaps encode of layer
     *i+1* on the device queue.
 
-Batch sizes are padded to the pipeline's ``bucket_sizes``, so jit compiles
-one program per (layer, bucket) — ``warmup()`` pre-traces them all, and
-``CodedPipeline.worker_program_traces`` stays bounded by the bucket count
-no matter how request batch sizes vary.
+Batch sizes are padded to each pipeline's ``bucket_sizes``, so jit compiles
+one program per (layer, bucket) — ``warmup()`` pre-traces them all, and the
+trace count summed over models stays bounded by geometries x buckets no
+matter how request batch sizes vary.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 
 import jax
@@ -39,63 +51,54 @@ from repro.core.pipeline import CodedPipeline, build_cnn_pipeline
 from repro.runtime import FcdccCluster, StragglerModel
 
 from .metrics import MetricsCollector, RequestRecord, ServingStats
-from .scheduler import RequestHandle, ScheduledBatch, Scheduler
+from .scheduler import MultiScheduler, RequestHandle, ScheduledBatch
 
 __all__ = ["CodedServer"]
 
 DEFAULT_BUCKETS = (1, 2, 4, 8)
 
 
-class CodedServer:
-    """Continuous-batching inference server over a resident coded pipeline.
+@dataclasses.dataclass
+class _ModelState:
+    """Engine-side state of one registered model."""
 
-    Owns one ``FcdccCluster`` (persistent per-worker pool, resident coded
-    filters) and one engine thread.  ``submit()`` is thread-safe and
-    returns a ``RequestHandle``; ``stats()`` aggregates per-request
-    metrics.  Use as a context manager or call ``start()``/``shutdown()``.
+    name: str
+    pipeline: CodedPipeline
+    prepared: tuple | None = None  # direct-mode survivor plan, built lazily
+
+
+class CodedServer:
+    """Continuous-batching inference server over resident coded pipelines.
+
+    Owns one ``FcdccCluster`` (persistent per-worker pool shared by every
+    registered model) and one engine thread.  ``submit()`` is thread-safe
+    and returns a ``RequestHandle``; ``stats()`` aggregates per-request
+    metrics (``stats(model=...)`` for one model).  Use as a context manager
+    or call ``start()``/``shutdown()``.
     """
 
-    def __init__(self, pipeline: CodedPipeline,
+    def __init__(self, pipeline: CodedPipeline | None = None,
                  straggler: StragglerModel | None = None, *,
                  mode: str = "simulated", execution: str = "cluster",
                  bucket_sizes=None, max_inflight: int = 2,
-                 poll_interval_s: float = 0.005):
+                 poll_interval_s: float = 0.005, model: str = "default"):
         if execution not in ("cluster", "direct"):
             raise ValueError(f"unknown execution mode {execution!r}")
-        if pipeline.bucket_sizes is None:
-            pipeline.bucket_sizes = CodedPipeline.normalize_buckets(
-                bucket_sizes if bucket_sizes is not None else DEFAULT_BUCKETS
-            )
-        elif bucket_sizes is not None and \
-                CodedPipeline.normalize_buckets(bucket_sizes) \
-                != pipeline.bucket_sizes:
-            raise ValueError(
-                f"pipeline already bucketed as {pipeline.bucket_sizes}, "
-                f"got bucket_sizes={tuple(bucket_sizes)}"
-            )
-        self.pipeline = pipeline
         self.execution = execution
-        spec0 = pipeline.specs[0]
-        # the cluster runs the pipeline's own worker programs, so it must
-        # share the pipeline's backend (lax / pallas) and interpret knob
-        self.cluster = FcdccCluster(spec0.plan, straggler, mode=mode,
-                                    backend=pipeline.backend,
-                                    interpret=pipeline.interpret)
-        self.cluster.load_pipeline(pipeline)
-        self.scheduler = Scheduler(
-            pipeline.pad_to_bucket,
-            max_batch=pipeline.max_batch,
-            max_inflight=max_inflight,
-        )
+        self.mode = mode
+        self.cluster: FcdccCluster | None = None
+        self._straggler = straggler
+        self._default_buckets = bucket_sizes
+        self._default_max_inflight = max_inflight
+        self.models: dict[str, _ModelState] = {}
+        self.scheduler = MultiScheduler()
         self.metrics = MetricsCollector()
         self._poll_interval_s = poll_interval_s
         self._stop = threading.Event()
         self._drain = True
         self._thread: threading.Thread | None = None
-        self._prepared = None  # direct-mode survivor plan, built lazily
-        c, h, w = spec0.geo.in_channels, spec0.geo.height, spec0.geo.width
-        self._input_shape = (c, h, w)
-        self._input_dtype = pipeline.coded_filters[0].dtype
+        if pipeline is not None:
+            self.register_model(model, pipeline)
 
     # -- construction helpers ----------------------------------------------
     @classmethod
@@ -104,9 +107,12 @@ class CodedServer:
                  straggler: StragglerModel | None = None,
                  mode: str = "simulated", execution: str = "cluster",
                  backend: str = "lax", interpret: bool = True,
-                 bucket_sizes=None, max_inflight: int = 2) -> "CodedServer":
+                 bucket_sizes=None, max_inflight: int = 2,
+                 model: str | None = None) -> "CodedServer":
         """Compile a named CNN (``lenet5``/``alexnet``/``vgg16``) into a
-        bucketed resident pipeline and wrap a server around it.
+        bucketed resident pipeline and wrap a server around it; the model
+        registers under ``model`` (default: the arch name).  Register more
+        models afterwards with ``register_model``.
 
         ``backend="pallas"`` serves every bucketed batch program through the
         fused coded-worker Pallas kernel; ``interpret=False`` lowers those
@@ -118,12 +124,106 @@ class CodedServer:
                           else DEFAULT_BUCKETS),
         )
         return cls(pipeline, straggler, mode=mode, execution=execution,
-                   max_inflight=max_inflight)
+                   max_inflight=max_inflight,
+                   model=model if model is not None else name)
+
+    # -- model registry ------------------------------------------------------
+    def register_model(self, name: str, pipeline: CodedPipeline, *,
+                       bucket_sizes=None, max_inflight: int | None = None
+                       ) -> None:
+        """Load ``pipeline`` as model ``name`` onto the shared worker pool.
+
+        The first registration creates the cluster (inheriting the
+        pipeline's backend/interpret); later ones must target the same
+        worker count and backend.  Each model gets its own scheduler
+        (queue, buckets, in-flight capacity) — registration happens before
+        ``start()``."""
+        if self._thread is not None:
+            raise RuntimeError("register models before start()")
+        if name in self.models:
+            raise ValueError(f"model {name!r} already registered")
+        # validate shared-pool compatibility BEFORE any mutation: a failed
+        # registration must not leave the caller's pipeline re-bucketed
+        if self.cluster is not None:
+            if pipeline.n != self.cluster.n:
+                raise ValueError(
+                    f"model {name!r} targets n={pipeline.n}, shared pool "
+                    f"has n={self.cluster.n}"
+                )
+            if (pipeline.backend, pipeline.interpret) != \
+                    (self.cluster.backend, self.cluster.interpret):
+                raise ValueError(
+                    f"model {name!r} built for backend="
+                    f"{pipeline.backend!r}/interpret={pipeline.interpret}, "
+                    f"shared pool runs {self.cluster.backend!r}/"
+                    f"interpret={self.cluster.interpret}"
+                )
+        buckets = bucket_sizes if bucket_sizes is not None \
+            else self._default_buckets
+        if pipeline.bucket_sizes is None:
+            pipeline.bucket_sizes = CodedPipeline.normalize_buckets(
+                buckets if buckets is not None else DEFAULT_BUCKETS
+            )
+        elif buckets is not None and \
+                CodedPipeline.normalize_buckets(buckets) \
+                != pipeline.bucket_sizes:
+            raise ValueError(
+                f"pipeline already bucketed as {pipeline.bucket_sizes}, "
+                f"got bucket_sizes={tuple(buckets)}"
+            )
+        if self.cluster is None:
+            # the cluster runs each pipeline's own worker programs, so it
+            # must share the pipelines' backend (lax / pallas) and
+            # interpret knob
+            self.cluster = FcdccCluster(
+                pipeline.specs[0].plan, self._straggler, mode=self.mode,
+                backend=pipeline.backend, interpret=pipeline.interpret,
+            )
+        self.cluster.load_pipeline(pipeline, name)
+        self.scheduler.add_model(
+            name, pipeline.pad_to_bucket, max_batch=pipeline.max_batch,
+            max_inflight=(max_inflight if max_inflight is not None
+                          else self._default_max_inflight),
+        )
+        self.models[name] = _ModelState(name, pipeline)
+
+    def model_names(self) -> list[str]:
+        return list(self.models)
+
+    @property
+    def pipeline(self) -> CodedPipeline:
+        """The single registered pipeline (single-model back-compat view);
+        ambiguous — and an error — once several models are registered."""
+        if len(self.models) != 1:
+            raise ValueError(
+                f"{len(self.models)} models registered "
+                f"({sorted(self.models)}); use models[name].pipeline"
+            )
+        return next(iter(self.models.values())).pipeline
+
+    def _resolve(self, model: str | None) -> _ModelState:
+        if not self.models:
+            raise ValueError("no model registered; call register_model()")
+        if model is None:
+            if len(self.models) > 1:
+                raise ValueError(
+                    f"{len(self.models)} models registered "
+                    f"({sorted(self.models)}); pass model="
+                )
+            return next(iter(self.models.values()))
+        try:
+            return self.models[model]
+        except KeyError:
+            raise ValueError(
+                f"unknown model {model!r}; registered: {sorted(self.models)}"
+            ) from None
 
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> "CodedServer":
         if self._thread is not None:
             raise RuntimeError("server already started")
+        if not self.models:
+            raise RuntimeError("no model registered; call register_model()")
         self._stop.clear()
         self._thread = threading.Thread(
             target=self._engine_loop, name="coded-server-engine", daemon=True
@@ -145,8 +245,8 @@ class CodedServer:
         self._stop.set()
         thread = self._thread
         if thread is not None:
-            with self.scheduler.queue.not_empty:
-                self.scheduler.queue.not_empty.notify_all()
+            with self.scheduler.not_empty:
+                self.scheduler.not_empty.notify_all()
             thread.join(timeout)
             if thread.is_alive():
                 err = TimeoutError(f"engine thread not done after {timeout}s")
@@ -161,7 +261,8 @@ class CodedServer:
             # a submit that passed the gate while the engine was exiting
             # enqueued onto a dead engine — fail it rather than strand it
             self.scheduler.cancel_all(RuntimeError("server shut down"))
-        self.cluster.shutdown()
+        if self.cluster is not None:
+            self.cluster.shutdown()
 
     def __enter__(self) -> "CodedServer":
         return self.start()
@@ -170,44 +271,55 @@ class CodedServer:
         self.shutdown()
 
     # -- request path --------------------------------------------------------
-    def submit(self, x) -> RequestHandle:
-        """Enqueue one ``(C, H, W)`` image; returns a handle whose
-        ``result()`` blocks for the decoded output.
+    def submit(self, x, model: str | None = None) -> RequestHandle:
+        """Enqueue one ``(C, H, W)`` image for ``model`` (optional while a
+        single model is registered); returns a handle whose ``result()``
+        blocks for the decoded output.
 
         Inputs are cast to the pipeline dtype: a stray uint8/float16 request
         must not re-trace every (layer, bucket) program under a new dtype —
         the bounded-program contract is shape *and* dtype."""
-        x = jnp.asarray(x, self._input_dtype)
-        if tuple(x.shape) != self._input_shape:
+        state = self._resolve(model)
+        pipe = state.pipeline
+        x = jnp.asarray(x, pipe.input_dtype)
+        if tuple(x.shape) != pipe.input_shape:
             raise ValueError(
-                f"request shape {tuple(x.shape)} != pipeline input "
-                f"{self._input_shape}"
+                f"request shape {tuple(x.shape)} != model "
+                f"{state.name!r} input {pipe.input_shape}"
             )
         # _stop closes the gate the moment shutdown begins (also after a
         # timed-out shutdown, where _thread is deliberately kept): a late
         # submit must not enqueue onto an engine that will never serve it
         if self._thread is None or self._stop.is_set():
             raise RuntimeError("server not running; call start()")
-        return self.scheduler.submit(x)
+        return self.scheduler.submit(state.name, x)
 
-    def submit_many(self, xs) -> list[RequestHandle]:
-        return [self.submit(x) for x in xs]
+    def submit_many(self, xs, model: str | None = None) -> list[RequestHandle]:
+        return [self.submit(x, model) for x in xs]
 
-    def warmup(self) -> None:
-        """Pre-trace every (layer, bucket) program by running one zero
-        batch per bucket end-to-end.  After this, serving never jit-compiles
-        (the bounded-program contract) and first-request latency is flat."""
-        for bucket in self.pipeline.bucket_sizes:
-            x = jnp.zeros((bucket,) + self._input_shape, self._input_dtype)
-            if self.execution == "direct":
-                jax.block_until_ready(
-                    self.pipeline.run_prepared(x, self._direct_plan())
-                )
-            else:
-                self.cluster.run_pipeline(x)
+    def warmup(self, model: str | None = None) -> None:
+        """Pre-trace every (layer, bucket) program — of one model, or of
+        every registered model (default) — by running one zero batch per
+        bucket end-to-end.  After this, serving never jit-compiles (the
+        bounded-program contract) and first-request latency is flat."""
+        states = ([self._resolve(model)] if model is not None
+                  else list(self.models.values()))
+        for state in states:
+            pipe = state.pipeline
+            for bucket in pipe.bucket_sizes:
+                x = jnp.zeros((bucket,) + pipe.input_shape, pipe.input_dtype)
+                if self.execution == "direct":
+                    jax.block_until_ready(
+                        pipe.run_prepared(x, self._direct_plan(state))
+                    )
+                else:
+                    self.cluster.run_pipeline(x, model=state.name)
 
-    def stats(self) -> ServingStats:
-        return self.metrics.stats()
+    def stats(self, model: str | None = None) -> ServingStats:
+        return self.metrics.stats(model)
+
+    def per_model_stats(self) -> dict[str, ServingStats]:
+        return self.metrics.per_model_stats()
 
     # -- engine loop ---------------------------------------------------------
     def _engine_loop(self) -> None:
@@ -215,46 +327,51 @@ class CodedServer:
         while True:
             if self._stop.is_set() and (not self._drain or not sched.has_work()):
                 break
-            # layer boundary: admit late arrivals until the queue is empty
-            # or every inflight slot is filled — a single admit per
-            # iteration would fill free capacity one layer-round late
+            # layer boundary: admit late arrivals (all models, rotating)
+            # until every queue is empty or every inflight slot is filled —
+            # a single admit per iteration would fill free capacity one
+            # layer-round late
             while sched.admit() is not None:
                 pass
-            batch = sched.next_batch()
-            if batch is None:
-                with sched.queue.not_empty:
-                    if not len(sched.queue) and not self._stop.is_set():
-                        sched.queue.not_empty.wait(self._poll_interval_s)
+            # re-pack equal-depth fragments into full buckets
+            for name, merges in sched.coalesce().items():
+                self.metrics.count_coalesced(name, merges)
+            picked = sched.next_batch()
+            if picked is None:
+                with sched.not_empty:
+                    if not sched.queued() and not self._stop.is_set():
+                        sched.not_empty.wait(self._poll_interval_s)
                 continue
+            name, batch = picked
             try:
-                self._advance(batch)
+                self._advance(self.models[name], batch)
             except Exception as err:  # degraded cluster etc: fail the batch
-                sched.retire(batch)
+                sched.retire(name, batch)
                 for req in batch.requests:
                     req.finish(error=err)
         if not self._drain:
             self.scheduler.cancel_all(RuntimeError("server shut down"))
 
-    def _advance(self, batch: ScheduledBatch) -> None:
+    def _advance(self, state: _ModelState, batch: ScheduledBatch) -> None:
         """Advance one batch — by one ConvL (cluster execution, so other
-        batches and new arrivals interleave at layer boundaries) or through
-        the whole prepared stack (direct execution)."""
+        batches and new arrivals of any model interleave at layer
+        boundaries) or through the whole prepared stack (direct)."""
         if self.execution == "direct":
             batch.x = jax.block_until_ready(
-                self.pipeline.run_prepared(batch.x, self._direct_plan())
+                state.pipeline.run_prepared(batch.x, self._direct_plan(state))
             )
-            batch.layer_idx = len(self.pipeline.specs)
+            batch.layer_idx = len(state.pipeline.specs)
         else:
             batch.x, timing = self.cluster.run_pipeline_layer(
-                batch.layer_idx, batch.x
+                batch.layer_idx, batch.x, state.name
             )
             batch.timings.append(timing)
             batch.layer_idx += 1
-        if batch.layer_idx >= len(self.pipeline.specs):
-            self._complete(batch)
+        if batch.layer_idx >= len(state.pipeline.specs):
+            self._complete(state, batch)
 
-    def _complete(self, batch: ScheduledBatch) -> None:
-        self.scheduler.retire(batch)
+    def _complete(self, state: _ModelState, batch: ScheduledBatch) -> None:
+        self.scheduler.retire(state.name, batch)
         y = np.asarray(batch.x)
         for row, req in enumerate(batch.requests):
             req.finish(result=y[row])
@@ -270,19 +387,20 @@ class CodedServer:
                 finish_t=req.finish_t,
                 bucket=batch.bucket,
                 batch_real=batch.real,
+                model=state.name,
             ))
 
     # -- direct-mode survivor pre-pick ---------------------------------------
-    def _direct_plan(self):
+    def _direct_plan(self, state: _ModelState):
         """The ``prepare`` plan over pre-picked survivors: dead workers
         excluded, remaining sorted by injected delay (fastest first) so each
-        layer decodes from the delta best.  Cached — every batch reuses it
-        until the straggler model changes."""
+        layer decodes from the delta best.  Cached per model — every batch
+        reuses it until the straggler model changes."""
         delays = self.cluster.straggler.delays
         key = tuple(np.asarray(delays).tolist())
-        if self._prepared is None or self._prepared[0] != key:
+        if state.prepared is None or state.prepared[0] != key:
             alive = [i for i in range(self.cluster.n)
                      if np.isfinite(delays[i])]
             alive.sort(key=lambda i: (delays[i], i))
-            self._prepared = (key, self.pipeline.prepare(alive))
-        return self._prepared[1]
+            state.prepared = (key, state.pipeline.prepare(alive))
+        return state.prepared[1]

@@ -1,0 +1,202 @@
+"""Stdlib JSON/HTTP front-end for the multi-model ``CodedServer``.
+
+A ``ThreadingHTTPServer`` (one handler thread per connection, no third-party
+deps) in front of the engine:
+
+  * ``POST /v1/infer``  — body ``{"model": "...", "input": [[[...]]]}``
+    (a nested-list ``(C, H, W)`` tensor; ``model`` optional while a single
+    model is registered).  The handler thread submits to the engine and
+    blocks on the request handle, so HTTP concurrency maps 1:1 onto engine
+    concurrency — concurrent posts land in the same continuous batches.
+    Replies ``{"model", "request_id", "shape", "output", "latency_s"}``.
+  * ``GET /v1/models``  — registered models with input shape/dtype, layer
+    count and bucket sizes.
+  * ``GET /v1/stats``   — aggregate + per-model ``ServingStats``.
+
+``ServingFrontend`` owns the socket lifecycle: ``start()`` binds (an
+ephemeral port when ``port=0``) and serves from a background thread;
+``shutdown()`` drains gracefully — stop accepting, join the in-flight
+handler threads (each blocked on its engine result), then drain the engine
+itself (when the front-end owns it).  Wired into ``launch/serve.py`` via
+``--http-port``.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+import numpy as np
+
+from .engine import CodedServer
+
+__all__ = ["ServingFrontend"]
+
+
+def _stats_dict(stats) -> dict:
+    d = {k: v for k, v in stats.__dict__.items()}
+    # nan is not valid JSON; percentiles of an empty window become null
+    return {k: (None if isinstance(v, float) and not np.isfinite(v) else v)
+            for k, v in d.items()}
+
+
+class _Handler(BaseHTTPRequestHandler):
+    # set per-server via the factory in ServingFrontend
+    server_version = "CodedServing/1.0"
+    engine: CodedServer = None
+    result_timeout_s: float = 120.0
+    # socket read timeout: an idle client connection (opened, nothing sent)
+    # must error out rather than pin a handler thread forever — shutdown()
+    # joins every handler, so one stalled reader would hang the drain
+    timeout = 30.0
+
+    def log_message(self, *args) -> None:  # quiet: the engine has metrics
+        pass
+
+    # -- plumbing ----------------------------------------------------------
+    def _reply(self, code: int, payload: dict) -> None:
+        body = json.dumps(payload).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _error(self, code: int, message: str) -> None:
+        self._reply(code, {"error": message})
+
+    # -- routes ------------------------------------------------------------
+    def do_GET(self) -> None:
+        if self.path == "/v1/models":
+            models = []
+            for name, state in self.engine.models.items():
+                pipe = state.pipeline
+                models.append({
+                    "name": name,
+                    "input_shape": list(pipe.input_shape),
+                    "dtype": np.dtype(pipe.input_dtype).name,
+                    "layers": len(pipe.specs),
+                    "bucket_sizes": list(pipe.bucket_sizes or ()),
+                })
+            self._reply(200, {"models": models})
+        elif self.path == "/v1/stats":
+            self._reply(200, {
+                "aggregate": _stats_dict(self.engine.stats()),
+                "per_model": {
+                    m: _stats_dict(s)
+                    for m, s in self.engine.per_model_stats().items()
+                },
+            })
+        else:
+            self._error(404, f"no route {self.path!r}")
+
+    def do_POST(self) -> None:
+        if self.path != "/v1/infer":
+            self._error(404, f"no route {self.path!r}")
+            return
+        try:
+            length = int(self.headers.get("Content-Length", 0))
+            payload = json.loads(self.rfile.read(length) or b"{}")
+            if not isinstance(payload, dict):
+                raise ValueError(f"body must be a JSON object, "
+                                 f"got {type(payload).__name__}")
+            x = np.asarray(payload["input"], dtype=np.float32)
+        except (ValueError, TypeError, KeyError, json.JSONDecodeError) as err:
+            self._error(400, f"bad request body: {err}")
+            return
+        model = payload.get("model")
+        if model is not None and model not in self.engine.models:
+            self._error(404, f"unknown model {model!r}; registered: "
+                             f"{sorted(self.engine.models)}")
+            return
+        try:
+            handle = self.engine.submit(x, model)
+        except ValueError as err:  # wrong shape / model field required
+            self._error(400, str(err))
+            return
+        except RuntimeError as err:  # engine not running / draining
+            self._error(503, str(err))
+            return
+        try:
+            y = handle.result(timeout=self.result_timeout_s)
+        except Exception as err:  # degraded cluster, engine shutdown, ...
+            self._error(503, f"{type(err).__name__}: {err}")
+            return
+        y = np.asarray(y)
+        self._reply(200, {
+            "model": model if model is not None
+            else self.engine.model_names()[0],
+            "request_id": handle.request_id,
+            "shape": list(y.shape),
+            "output": y.tolist(),
+            "latency_s": handle.latency_s,
+        })
+
+
+class ServingFrontend:
+    """HTTP front-end over a ``CodedServer``.
+
+    ``manage_server=True`` ties the engine lifecycle to the front-end:
+    ``start()`` starts the engine (unless already running) and
+    ``shutdown()`` drains it after the HTTP side is quiesced.  With
+    ``port=0`` the OS picks a free port — read ``.port`` after start.
+    """
+
+    def __init__(self, engine: CodedServer, *, host: str = "127.0.0.1",
+                 port: int = 0, manage_server: bool = True,
+                 result_timeout_s: float = 120.0):
+        self.engine = engine
+        self.manage_server = manage_server
+        handler = type("Handler", (_Handler,), {
+            "engine": engine, "result_timeout_s": result_timeout_s,
+        })
+        self.httpd = ThreadingHTTPServer((host, port), handler)
+        # ThreadingHTTPServer defaults to daemon handler threads, which
+        # server_close() does NOT join — graceful drain needs every accepted
+        # request answered before the engine shuts down, so track them
+        self.httpd.daemon_threads = False
+        self._thread: threading.Thread | None = None
+
+    @property
+    def host(self) -> str:
+        return self.httpd.server_address[0]
+
+    @property
+    def port(self) -> int:
+        return self.httpd.server_address[1]
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def start(self) -> "ServingFrontend":
+        if self._thread is not None:
+            raise RuntimeError("frontend already started")
+        if self.manage_server and self.engine._thread is None:
+            self.engine.start()
+        self._thread = threading.Thread(
+            target=self.httpd.serve_forever, name="coded-serving-http",
+            daemon=True,
+        )
+        self._thread.start()
+        return self
+
+    def shutdown(self) -> None:
+        """Graceful drain: stop accepting, join in-flight handler threads
+        (each completes once the engine delivers its result), then drain
+        the engine (when managed).  Idempotent."""
+        thread, self._thread = self._thread, None
+        if thread is not None:
+            self.httpd.shutdown()       # stop the accept loop
+            thread.join(30.0)
+        # joins per-connection handler threads (block_on_close), so every
+        # accepted request gets its response before the engine goes away
+        self.httpd.server_close()
+        if self.manage_server and self.engine._thread is not None:
+            self.engine.shutdown(drain=True)
+
+    def __enter__(self) -> "ServingFrontend":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()

@@ -1,11 +1,14 @@
 """Per-request serving metrics: latency breakdown, percentiles, throughput.
 
 Every request that flows through the ``CodedServer`` leaves one
-``RequestRecord`` (arrival -> batch start -> finish); ``MetricsCollector``
-aggregates them into a ``ServingStats`` with queue-wait / execute /
-end-to-end percentiles and images/s throughput — the numbers
-``benchmarks/exp6_serving.py`` compares against the sequential
-``run_pipeline`` baseline.
+``RequestRecord`` (arrival -> batch start -> finish, tagged with its
+model); ``MetricsCollector`` aggregates them into a ``ServingStats`` with
+queue-wait / execute / end-to-end percentiles and images/s throughput —
+the numbers ``benchmarks/exp6_serving.py`` compares against the
+sequential ``run_pipeline`` baseline.  Multi-model servers get the same
+stats *per model* (``stats(model=...)`` / ``per_model_stats()``) while
+the aggregate view stays exactly the single-model one; equal-depth batch
+merges are counted per model too (``count_coalesced``).
 """
 from __future__ import annotations
 
@@ -28,6 +31,7 @@ class RequestRecord:
     finish_t: float    # result decoded and delivered
     bucket: int        # padded batch size the request rode in
     batch_real: int    # real (unpadded) requests in that batch
+    model: str = ""    # model namespace the request was served under
 
     @property
     def queue_wait_s(self) -> float:
@@ -64,6 +68,7 @@ class ServingStats:
     execute_p50_s: float
     execute_p95_s: float
     mean_batch_real: float   # average *real* occupancy of executed buckets
+    coalesced: int = 0       # equal-depth batch merges behind these requests
 
     def summary_line(self) -> str:
         return (
@@ -78,28 +83,55 @@ class ServingStats:
 
 class MetricsCollector:
     """Thread-safe sink for ``RequestRecord``s (the engine thread writes,
-    callers read a snapshot)."""
+    callers read a snapshot).  Records are tagged per model; ``stats``
+    with no argument is the aggregate over every model."""
 
     def __init__(self):
         self._lock = threading.Lock()
         self._records: list[RequestRecord] = []
+        self._coalesced: dict[str, int] = {}
 
     def record(self, rec: RequestRecord) -> None:
         with self._lock:
             self._records.append(rec)
 
-    def records(self) -> list[RequestRecord]:
+    def count_coalesced(self, model: str, merges: int = 1) -> None:
+        """Account ``merges`` equal-depth batch merges to ``model``."""
         with self._lock:
-            return list(self._records)
+            self._coalesced[model] = self._coalesced.get(model, 0) + merges
+
+    def records(self, model: str | None = None) -> list[RequestRecord]:
+        with self._lock:
+            recs = list(self._records)
+        if model is None:
+            return recs
+        return [r for r in recs if r.model == model]
+
+    def models(self) -> list[str]:
+        """Model names seen so far (served requests or counted merges)."""
+        with self._lock:
+            seen = {r.model for r in self._records} | set(self._coalesced)
+        return sorted(seen)
 
     def reset(self) -> None:
         with self._lock:
             self._records.clear()
+            self._coalesced.clear()
 
-    def stats(self) -> ServingStats:
-        recs = self.records()
+    def coalesced(self, model: str | None = None) -> int:
+        with self._lock:
+            if model is None:
+                return sum(self._coalesced.values())
+            return self._coalesced.get(model, 0)
+
+    def stats(self, model: str | None = None) -> ServingStats:
+        """Aggregate stats — over every model (``model=None``, the
+        single-model view exp6 prints) or one model's requests only."""
+        recs = self.records(model)
+        merges = self.coalesced(model)
         if not recs:
-            return ServingStats(0, 0.0, 0.0, *([float("nan")] * 7), 0.0)
+            return ServingStats(0, 0.0, 0.0, *([float("nan")] * 7), 0.0,
+                                coalesced=merges)
         e2e = [r.e2e_s for r in recs]
         qw = [r.queue_wait_s for r in recs]
         ex = [r.execute_s for r in recs]
@@ -116,4 +148,9 @@ class MetricsCollector:
             execute_p50_s=percentile(ex, 50),
             execute_p95_s=percentile(ex, 95),
             mean_batch_real=float(np.mean([r.batch_real for r in recs])),
+            coalesced=merges,
         )
+
+    def per_model_stats(self) -> dict[str, "ServingStats"]:
+        """One ``ServingStats`` per model seen (aggregate view unchanged)."""
+        return {m: self.stats(m) for m in self.models()}

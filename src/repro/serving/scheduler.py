@@ -19,6 +19,17 @@ Two properties make this *continuous* rather than static batching:
 Scheduling policy is deepest-layer-first: finishing an almost-done batch
 frees its requests (latency) before opening a new front (throughput);
 ties break FIFO.
+
+Multi-model serving stacks one ``Scheduler`` per registered model under a
+``MultiScheduler``: each model keeps its own queue, buckets, and in-flight
+set, and the engine's pick is fair-share — a rotating round-robin sweep
+*across* the models with in-flight work (no model with pending work ever
+waits more than one full sweep of the others, and idle periods build up
+no deficit), then deepest-first *within* the chosen model.  Two in-flight batches of the
+same model sitting at the same layer boundary are coalesced into one
+bucketed batch when their combined real size fits (``coalesce``), so
+bursty arrivals converge back to full buckets instead of draining as
+fragments.
 """
 from __future__ import annotations
 
@@ -31,7 +42,7 @@ from typing import Callable
 import jax.numpy as jnp
 
 __all__ = ["Request", "RequestHandle", "RequestQueue", "ScheduledBatch",
-           "Scheduler"]
+           "Scheduler", "MultiScheduler"]
 
 
 @dataclasses.dataclass
@@ -96,14 +107,21 @@ class RequestHandle:
 
 
 class RequestQueue:
-    """Thread-safe FIFO with a condition the engine loop can wait on."""
+    """Thread-safe FIFO with a condition the engine loop can wait on.
 
-    def __init__(self):
+    ``not_empty``/``ids`` may be shared across queues: a ``MultiScheduler``
+    hands every model queue the same condition (one engine wait covers all
+    models) and the same id counter (request ids stay unique server-wide).
+    """
+
+    def __init__(self, not_empty: threading.Condition | None = None,
+                 ids=None):
         # reentrant: the engine holds the condition while checking len()
-        self._lock = threading.RLock()
-        self.not_empty = threading.Condition(self._lock)
+        self.not_empty = (threading.Condition(threading.RLock())
+                          if not_empty is None else not_empty)
+        self._lock = self.not_empty
         self._queue: list[Request] = []
-        self._ids = itertools.count()
+        self._ids = itertools.count() if ids is None else ids
 
     def submit(self, x: jnp.ndarray) -> RequestHandle:
         req = Request(next(self._ids), x, time.perf_counter())
@@ -137,6 +155,7 @@ class ScheduledBatch:
     x: jnp.ndarray
     bucket: int
     layer_idx: int = 0
+    model: str = ""
     timings: list = dataclasses.field(default_factory=list)
 
     @property
@@ -145,19 +164,21 @@ class ScheduledBatch:
 
 
 class Scheduler:
-    """Queue + in-flight set + assembly/advance policy.
+    """Queue + in-flight set + assembly/advance policy for ONE model.
 
-    ``pad_to_bucket`` comes from the pipeline so the padded batch sizes
-    match the jit program buckets exactly.  The engine loop drives it:
-    ``admit()`` at each layer boundary, then ``next_batch()`` to pick what
-    advances.
+    ``pad_to_bucket`` comes from the model's pipeline so the padded batch
+    sizes match its jit program buckets exactly.  The engine loop drives
+    it: ``admit()`` at each layer boundary, ``coalesce()`` to re-pack
+    equal-depth fragments, then ``next_batch()`` to pick what advances.
     """
 
     def __init__(self, pad_to_bucket: Callable, *, max_batch: int,
-                 max_inflight: int = 2):
+                 max_inflight: int = 2, name: str = "",
+                 queue: RequestQueue | None = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
-        self.queue = RequestQueue()
+        self.name = name
+        self.queue = queue if queue is not None else RequestQueue()
         self.inflight: list[ScheduledBatch] = []
         # guards ``inflight``: normally only the engine thread mutates it,
         # but a shutdown whose join timed out calls ``cancel_all`` from the
@@ -175,26 +196,66 @@ class Scheduler:
             inflight = bool(self.inflight)
         return inflight or len(self.queue) > 0
 
-    def admit(self) -> ScheduledBatch | None:
+    def admit(self, limit: int | None = None) -> ScheduledBatch | None:
         """Assemble waiting requests into one new bucketed batch (layer 0)
         if capacity allows.  Called at every layer boundary — this is the
-        continuous-batching admission point."""
+        continuous-batching admission point.  ``limit`` caps the batch
+        below ``max_batch`` (tests use it to force fragmented batches)."""
         with self._lock:
             if len(self.inflight) >= self.max_inflight:
                 return None
-        reqs = self.queue.pop_up_to(self.max_batch)
+        take = self.max_batch if limit is None else min(limit, self.max_batch)
+        reqs = self.queue.pop_up_to(take)
         if not reqs:
             return None
         x = jnp.stack([r.x for r in reqs], axis=0)
         x, real = self.pad_to_bucket(x)
         assert real == len(reqs)
-        batch = ScheduledBatch(reqs, x, bucket=int(x.shape[0]))
+        batch = ScheduledBatch(reqs, x, bucket=int(x.shape[0]),
+                               model=self.name)
         now = time.perf_counter()
         for r in reqs:
             r.start_t = now
         with self._lock:
             self.inflight.append(batch)
         return batch
+
+    def coalesce(self) -> int:
+        """Merge in-flight batches sitting at the SAME layer boundary into
+        one bucketed batch while the combined real size fits ``max_batch``.
+
+        Rows are independent through every coded layer (the batch axis
+        rides inside each worker's subtask), so a merged batch decodes to
+        exactly the per-batch results — this only trades fragments for one
+        fuller bucket (fewer master/worker rounds).  Fragments arise from
+        admission racing arrivals, and — under multi-model fair share —
+        from a model's batches waiting at a boundary while another model
+        advances.  Returns the number of merges performed (the engine
+        accounts them into ``MetricsCollector`` — the single counter)."""
+        merges = 0
+        with self._lock:
+            by_depth: dict[int, list[ScheduledBatch]] = {}
+            for b in self.inflight:
+                by_depth.setdefault(b.layer_idx, []).append(b)
+            for group in by_depth.values():
+                group.sort(key=lambda b: b.real)
+                while len(group) > 1:
+                    a, b = group[0], group[1]
+                    if a.real + b.real > self.max_batch:
+                        break
+                    x = jnp.concatenate(
+                        [a.x[: a.real], b.x[: b.real]], axis=0
+                    )
+                    x, real = self.pad_to_bucket(x)
+                    a.requests.extend(b.requests)
+                    a.x, a.bucket = x, int(x.shape[0])
+                    # a's timings describe the merged batch's past; b's are
+                    # dropped with b (only per-request metrics survive)
+                    self.inflight.remove(b)
+                    group.pop(1)
+                    group.sort(key=lambda b: b.real)
+                    merges += 1
+        return merges
 
     def next_batch(self) -> ScheduledBatch | None:
         """Deepest-layer-first (FIFO among ties): drain nearly-finished
@@ -226,3 +287,99 @@ class Scheduler:
                 req.finish(error=error)
                 cancelled += 1
         return cancelled
+
+
+class MultiScheduler:
+    """Per-model ``Scheduler``s under one fair-share policy.
+
+    Every model registered with ``add_model`` gets its own queue (sharing
+    ONE condition and id counter, so a submit to any model wakes the one
+    engine loop and request ids stay unique server-wide), its own buckets,
+    and its own in-flight capacity.  The engine drives:
+
+      * ``admit()``   — one new batch from some model with queued work and
+        free capacity, rotating so no model's queue monopolizes admission;
+      * ``coalesce()``— equal-depth merges inside every model;
+      * ``next_batch()`` — the fair-share pick: a rotating sweep over the
+        models, granting one layer round to the next model with in-flight
+        work (idle models are skipped without losing their turn's place).
+        A model with work is never more than one full sweep of the other
+        models away from its next round — the bound is positional, NOT a
+        least-served count, so a model that idles while another serves
+        builds up no deficit it could later monopolize the engine with.
+        Within the chosen model the pick stays deepest-first.
+    """
+
+    def __init__(self):
+        self.not_empty = threading.Condition(threading.RLock())
+        self._ids = itertools.count()
+        self.schedulers: dict[str, Scheduler] = {}
+        # accounting only (stats/tests): layer-rounds granted per model
+        self.served_rounds: dict[str, int] = {}
+        self._admit_rr = 0
+        self._pick_rr = 0
+
+    def add_model(self, name: str, pad_to_bucket: Callable, *,
+                  max_batch: int, max_inflight: int = 2) -> Scheduler:
+        if name in self.schedulers:
+            raise ValueError(f"model {name!r} already registered")
+        sched = Scheduler(
+            pad_to_bucket, max_batch=max_batch, max_inflight=max_inflight,
+            name=name, queue=RequestQueue(self.not_empty, self._ids),
+        )
+        self.schedulers[name] = sched
+        self.served_rounds[name] = 0
+        return sched
+
+    def __getitem__(self, name: str) -> Scheduler:
+        return self.schedulers[name]
+
+    def submit(self, model: str, x: jnp.ndarray) -> RequestHandle:
+        return self.schedulers[model].submit(x)
+
+    def has_work(self) -> bool:
+        return any(s.has_work() for s in self.schedulers.values())
+
+    def queued(self) -> int:
+        return sum(len(s.queue) for s in self.schedulers.values())
+
+    def admit(self) -> ScheduledBatch | None:
+        """Admit one new batch from the next model (rotating) that has both
+        queued requests and free in-flight capacity.  The engine loops this
+        until it returns None — all models' capacity fills at one boundary."""
+        names = list(self.schedulers)
+        for off in range(len(names)):
+            name = names[(self._admit_rr + off) % len(names)]
+            batch = self.schedulers[name].admit()
+            if batch is not None:
+                self._admit_rr = (self._admit_rr + off + 1) % len(names)
+                return batch
+        return None
+
+    def coalesce(self) -> dict[str, int]:
+        """Equal-depth merges per model (empty dict = nothing merged)."""
+        out = {}
+        for name, sched in self.schedulers.items():
+            merges = sched.coalesce()
+            if merges:
+                out[name] = merges
+        return out
+
+    def next_batch(self) -> tuple[str, ScheduledBatch] | None:
+        """Fair-share pick: the rotating sweep (see class docstring), one
+        served round accounted to the winner."""
+        names = list(self.schedulers)
+        for off in range(len(names)):
+            name = names[(self._pick_rr + off) % len(names)]
+            batch = self.schedulers[name].next_batch()
+            if batch is not None:
+                self._pick_rr = (self._pick_rr + off + 1) % len(names)
+                self.served_rounds[name] += 1
+                return name, batch
+        return None
+
+    def retire(self, model: str, batch: ScheduledBatch) -> None:
+        self.schedulers[model].retire(batch)
+
+    def cancel_all(self, error: BaseException) -> int:
+        return sum(s.cancel_all(error) for s in self.schedulers.values())

@@ -1,14 +1,20 @@
-"""The coded serving engine: CodedServer + scheduler + metrics.
+"""The coded serving engine: CodedServer + scheduler + metrics + frontend.
 
 Covers: served results match the pipeline's own output; bucketed batch
 assembly keeps the jit program count bounded by the *bucket* count while
 request batch sizes vary; continuous admission at layer boundaries;
 ``run_prepared`` equivalence with ``run``; the cluster's ``submit``/
 ``collect`` split (persistent per-worker pool, worker_times snapshot);
-straggler resilience end-to-end through the server; and metrics math.
+straggler resilience end-to-end through the server; metrics math; and the
+multi-model engine — shared-pool isolation, namespaced filter caches,
+fair-share scheduling, equal-depth coalescing, and the HTTP front-end
+round trip.
 """
+import json
 import threading
 import time
+import urllib.error
+import urllib.request
 
 import jax.numpy as jnp
 import numpy as np
@@ -18,13 +24,26 @@ from repro.core import CodedPipeline, FcdccPlan
 from repro.core.pipeline import plan_layers
 from repro.models.cnn import ConvL
 from repro.runtime import ClusterDegraded, FcdccCluster, StragglerModel
-from repro.serving import CodedServer, MetricsCollector, RequestRecord, percentile
+from repro.serving import (
+    CodedServer,
+    MetricsCollector,
+    RequestRecord,
+    ServingFrontend,
+    percentile,
+)
 
 RNG = np.random.default_rng(0)
 
 STACK = [
     ConvL("s1", 2, 8, 3, stride=1, padding=1, pool=2),
     ConvL("s2", 8, 8, 3, padding=1),
+]
+
+# a second model: SAME layer names as STACK, different channels — the
+# shared-cluster namespacing must keep the two models' filters apart
+STACK_B = [
+    ConvL("s1", 3, 8, 3, stride=1, padding=1, pool=2),
+    ConvL("s2", 8, 4, 3, padding=1),
 ]
 
 
@@ -300,9 +319,9 @@ def test_server_shutdown_timeout_keeps_thread_and_cancels():
     gate = threading.Event()
     orig = server.cluster.run_pipeline_layer
 
-    def wedged_layer(idx, x):
+    def wedged_layer(idx, x, model=None):
         gate.wait(30.0)  # engine blocks here until the test releases it
-        return orig(idx, x)
+        return orig(idx, x, model)
 
     server.cluster.run_pipeline_layer = wedged_layer
     server.start()
@@ -333,14 +352,15 @@ def test_engine_admits_up_to_capacity_per_boundary():
     inflight_at_advance = []
     orig = server.cluster.run_pipeline_layer
 
-    def spy(idx, x):
-        inflight_at_advance.append(len(server.scheduler.inflight))
-        return orig(idx, x)
+    def spy(idx, x, model=None):
+        inflight_at_advance.append(len(server.scheduler["default"].inflight))
+        return orig(idx, x, model)
 
     server.cluster.run_pipeline_layer = spy
     # queue two single-image batches BEFORE the engine starts: the first
     # boundary sees both waiting with both slots free
-    handles = [server.scheduler.queue.submit(x) for x in _images(2)]
+    handles = [server.scheduler["default"].queue.submit(x)
+               for x in _images(2)]
     with server:
         for h in handles:
             h.result(timeout=60.0)
@@ -413,6 +433,351 @@ def test_server_concurrent_clients():
         np.testing.assert_allclose(
             np.asarray(y), np.asarray(ref_pipe.run(x)), rtol=1e-4, atol=1e-4
         )
+
+
+# -- multi-model serving ---------------------------------------------------
+def _pipeline_b(bucket_sizes=(1, 2, 4), n=6, hw=12, kab=(4, 2)):
+    params = _params(STACK_B, seed=3)
+    specs = plan_layers(STACK_B, hw, n, default_kab=kab)
+    return CodedPipeline(specs, params, bucket_sizes=bucket_sizes), params
+
+
+def _images_b(count, hw=12):
+    return [jnp.asarray(RNG.standard_normal((3, hw, hw)), jnp.float32)
+            for _ in range(count)]
+
+
+def _prequeue(server, model, xs):
+    """Enqueue requests before ``start()`` (dtype pre-cast like submit)."""
+    pipe = server.models[model].pipeline
+    return [server.scheduler[model].queue.submit(
+        jnp.asarray(x, pipe.input_dtype)) for x in xs]
+
+
+def test_multimodel_bitexact_vs_single_model_servers():
+    """The acceptance contract: two models with different (k_a, k_b) plans
+    served concurrently from ONE shared worker pool produce bit-exact
+    per-model outputs vs their own single-model servers, with the jit
+    trace count bounded by geometries x buckets summed over models.
+
+    Distinct finite delays make the simulated fastest-delta subset
+    deterministic, so identical programs see identical inputs."""
+    delays = np.arange(6, dtype=float)  # worker 0 fastest, strict order
+    pipe_a, _ = _pipeline()
+    pipe_b, _ = _pipeline_b()
+    xs_a, xs_b = _images(4), _images_b(3)
+
+    def serve_single(pipe, xs):
+        server = CodedServer(pipe, StragglerModel(delays), mode="simulated")
+        handles = _prequeue(server, "default", xs)
+        with server:
+            return [np.asarray(h.result(timeout=60.0)) for h in handles]
+
+    ref_a = serve_single(pipe_a, xs_a)
+    ref_b = serve_single(pipe_b, xs_b)
+
+    shared = CodedServer(straggler=StragglerModel(delays), mode="simulated")
+    shared.register_model("a", pipe_a)
+    shared.register_model("b", pipe_b)
+    ha = _prequeue(shared, "a", xs_a)
+    hb = _prequeue(shared, "b", xs_b)
+    with shared:
+        out_a = [np.asarray(h.result(timeout=60.0)) for h in ha]
+        out_b = [np.asarray(h.result(timeout=60.0)) for h in hb]
+    for got, ref in zip(out_a + out_b, ref_a + ref_b):
+        np.testing.assert_array_equal(got, ref)
+    traces = sum(s.pipeline.worker_program_traces
+                 for s in shared.models.values())
+    bound = sum(s.pipeline.num_geometries * len(s.pipeline.bucket_sizes)
+                for s in shared.models.values())
+    assert traces <= bound
+    # per-model metrics break out; the aggregate covers both
+    per = shared.per_model_stats()
+    assert per["a"].completed == 4 and per["b"].completed == 3
+    assert shared.stats().completed == 7
+    assert shared.stats("a").completed == 4
+
+
+def test_multimodel_straggler_isolation_threads_mode():
+    """Model A's straggler-heavy wall-clock rounds must not corrupt model
+    B's results on the shared pool (threads mode, real sleeps)."""
+    delays = np.zeros(6)
+    delays[0] = 0.3
+    delays[5] = np.inf  # and one dead worker
+    pipe_a, _ = _pipeline()
+    pipe_b, _ = _pipeline_b()
+    ref_a, _ = _pipeline()
+    ref_b, _ = _pipeline_b()
+    server = CodedServer(straggler=StragglerModel(delays), mode="threads")
+    server.register_model("a", pipe_a)
+    server.register_model("b", pipe_b)
+    server.warmup()
+    xs_a, xs_b = _images(3), _images_b(3)
+    with server:
+        ha = server.submit_many(xs_a, "a")
+        hb = server.submit_many(xs_b, "b")
+        out_a = [h.result(timeout=60.0) for h in ha]
+        out_b = [h.result(timeout=60.0) for h in hb]
+    for x, y in zip(xs_a, out_a):
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(ref_a.run(x)), rtol=1e-4, atol=1e-4)
+    for x, y in zip(xs_b, out_b):
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(ref_b.run(x)), rtol=1e-4, atol=1e-4)
+
+
+def test_cluster_filter_cache_no_collision_across_pipelines():
+    """Two pipelines with the SAME layer names but different plans stay
+    resident on one cluster at once — namespaced entries, no clobbering,
+    and each model decodes against its own filters."""
+    pipe1, _ = _pipeline()                      # plan (2, 4)
+    specs2 = plan_layers(STACK, 12, 6, default_kab=(4, 2))
+    pipe2 = CodedPipeline(specs2, _params(STACK, seed=9))  # plan (4, 2)
+    cluster = FcdccCluster(pipe1.specs[0].plan, StragglerModel.none(6),
+                           mode="simulated")
+    cluster.load_pipeline(pipe1, "m1")
+    cluster.load_pipeline(pipe2, "m2")
+    assert {"m1/s1", "m1/s2", "m2/s1", "m2/s2"} <= set(cluster._resident)
+    x = jnp.asarray(RNG.standard_normal((2, 2, 12, 12)), jnp.float32)
+    y1, _ = cluster.run_pipeline(x, model="m1")
+    y2, _ = cluster.run_pipeline(x, model="m2")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(pipe1.run(x)),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(pipe2.run(x)),
+                               rtol=1e-4, atol=1e-4)
+    # model selector is mandatory once ambiguous, and must exist
+    with pytest.raises(ValueError, match="pass model="):
+        cluster.run_pipeline(x)
+    with pytest.raises(ValueError, match="unknown model"):
+        cluster.run_pipeline(x, model="nope")
+    # an explicitly passed pipeline is never ambiguous (default namespace)
+    y3, _ = cluster.run_pipeline(x, pipe1)
+    np.testing.assert_allclose(np.asarray(y3), np.asarray(y1),
+                               rtol=1e-4, atol=1e-4)
+    # re-registering a name purges ALL of its old resident entries (a v2
+    # with fewer layers must not leave v1 filters reachable)
+    short = CodedPipeline(plan_layers(STACK[:1], 12, 6, default_kab=(2, 4)),
+                          _params(STACK))
+    cluster.load_pipeline(short, "m1")
+    assert "m1/s1" in cluster._resident and "m1/s2" not in cluster._resident
+    cluster.shutdown()
+
+
+def test_fair_share_interleaves_models():
+    """The starvation bound: with both models holding work, layer rounds
+    alternate (least-served first) — at every prefix of the advance
+    sequence the per-model round counts differ by at most 1."""
+    pipe_a, _ = _pipeline(bucket_sizes=(1,))
+    pipe_b, _ = _pipeline_b(bucket_sizes=(1,))
+    server = CodedServer(mode="simulated")
+    server.register_model("a", pipe_a)
+    server.register_model("b", pipe_b)
+    advanced = []
+    orig = server.cluster.run_pipeline_layer
+
+    def spy(idx, x, model=None):
+        advanced.append(model)
+        return orig(idx, x, model)
+
+    server.cluster.run_pipeline_layer = spy
+    ha = _prequeue(server, "a", _images(3))
+    hb = _prequeue(server, "b", _images_b(3))
+    with server:
+        for h in ha + hb:
+            h.result(timeout=60.0)
+    # 3 requests x 2 layers each = 6 rounds per model, interleaved fairly
+    assert advanced.count("a") == 6 and advanced.count("b") == 6
+    for i in range(1, len(advanced) + 1):
+        prefix = advanced[:i]
+        assert abs(prefix.count("a") - prefix.count("b")) <= 1, prefix
+
+
+def test_fair_share_idle_model_builds_no_deficit():
+    """A model that idled while another served must NOT bank a least-served
+    deficit it can later spend monopolizing the engine: the sweep is
+    positional, so once both have work the picks alternate immediately."""
+    from repro.serving.scheduler import MultiScheduler
+
+    multi = MultiScheduler()
+    for name in ("a", "b"):
+        multi.add_model(name, lambda x: (x, x.shape[0]), max_batch=1,
+                        max_inflight=8)
+    # phase 1: only 'a' has work — it serves 50 rounds unopposed
+    multi.submit("a", jnp.zeros((2, 12, 12)))
+    assert multi.admit() is not None
+    for _ in range(50):
+        name, _batch = multi.next_batch()
+        assert name == "a"
+    # phase 2: 'b' arrives — picks must alternate from the very next round
+    multi.submit("b", jnp.zeros((3, 12, 12)))
+    assert multi.admit() is not None
+    picks = [multi.next_batch()[0] for _ in range(6)]
+    assert picks == ["b", "a", "b", "a", "b", "a"]
+
+
+def test_coalescing_merges_equal_depth_batches():
+    """Two in-flight fragments of one model at the same layer boundary are
+    merged into one bucketed batch (counted in stats) and still decode to
+    exactly the per-request reference results."""
+    pipe, _ = _pipeline(bucket_sizes=(1, 2, 4))
+    ref_pipe, _ = _pipeline()
+    server = CodedServer(pipe, StragglerModel.none(6), mode="simulated")
+    xs = _images(2)
+    sched = server.scheduler["default"]
+    # force two fragment batches at layer 0: admit each request alone
+    handles = []
+    for x in xs:
+        handles.append(sched.queue.submit(jnp.asarray(x, pipe.input_dtype)))
+        assert sched.admit() is not None
+    assert [b.real for b in sched.inflight] == [1, 1]
+    with server:
+        outs = [h.result(timeout=60.0) for h in handles]
+    for x, y in zip(xs, outs):
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(ref_pipe.run(x)), rtol=1e-4, atol=1e-4)
+    assert server.stats().completed == 2
+    assert server.stats().coalesced == 1
+    assert server.stats("default").coalesced == 1
+    recs = sorted(server.metrics.records(), key=lambda r: r.request_id)
+    assert [r.batch_real for r in recs] == [2, 2]  # both rode one batch
+
+
+def test_coalesce_respects_max_batch():
+    """Fragments whose combined real size exceeds the largest bucket stay
+    separate (a merge must never overflow the jit program buckets)."""
+    from repro.serving.scheduler import Scheduler
+
+    pipe, _ = _pipeline(bucket_sizes=(1, 2))
+    sched = Scheduler(pipe.pad_to_bucket, max_batch=2, max_inflight=4)
+    for _ in range(3):
+        sched.queue.submit(_images(1)[0])
+        sched.admit(limit=1)
+    assert len(sched.inflight) == 3
+    assert sched.coalesce() == 1
+    assert sorted(b.real for b in sched.inflight) == [1, 2]
+    assert sched.coalesce() == 0  # nothing else fits
+
+
+def test_register_model_validation():
+    pipe_a, _ = _pipeline()
+    server = CodedServer(pipe_a, StragglerModel.none(6), mode="simulated")
+    with pytest.raises(ValueError, match="already registered"):
+        server.register_model("default", _pipeline()[0])
+    unbucketed = CodedPipeline(plan_layers(STACK, 12, 8, default_kab=(2, 4)),
+                               _params(STACK))
+    with pytest.raises(ValueError, match="n=8"):
+        server.register_model("bigger", unbucketed)
+    # a failed registration must not have re-bucketed the caller's pipeline
+    assert unbucketed.bucket_sizes is None
+    pal = CodedPipeline(plan_layers(STACK_B, 12, 6, default_kab=(2, 4)),
+                        _params(STACK_B), backend="pallas",
+                        bucket_sizes=(1, 2))
+    with pytest.raises(ValueError, match="backend"):
+        server.register_model("pallas", pal)
+    with pytest.raises(ValueError, match="unknown model"):
+        server.submit(_images(1)[0], "nope")
+    server.start()
+    try:
+        with pytest.raises(RuntimeError, match="before start"):
+            server.register_model("late", _pipeline_b()[0])
+    finally:
+        server.shutdown()
+    # a server with no model registered refuses to start
+    with pytest.raises(RuntimeError, match="no model"):
+        CodedServer(mode="simulated").start()
+
+
+def test_multimodel_submit_requires_model_name():
+    server = CodedServer(mode="simulated")
+    server.register_model("a", _pipeline()[0])
+    server.register_model("b", _pipeline_b()[0])
+    with server:
+        with pytest.raises(ValueError, match="pass model="):
+            server.submit(_images(1)[0])
+        y = server.submit(_images(1)[0], "a").result(timeout=60.0)
+    assert y is not None
+    with pytest.raises(ValueError, match="use models"):
+        server.pipeline  # single-model back-compat view is now ambiguous
+
+
+# -- HTTP front-end --------------------------------------------------------
+def _http(method, url, payload=None, timeout=30.0):
+    data = None if payload is None else json.dumps(payload).encode()
+    req = urllib.request.Request(url, data=data, method=method)
+    if data is not None:
+        req.add_header("Content-Type", "application/json")
+    with urllib.request.urlopen(req, timeout=timeout) as resp:
+        return resp.status, json.loads(resp.read())
+
+
+def test_http_frontend_roundtrip_and_drain():
+    """POST /v1/infer for two models on an ephemeral port, stats/models
+    introspection, error codes, then a graceful drain: no leaked engine
+    thread, no leaked worker executors, socket closed."""
+    pipe_a, _ = _pipeline()
+    pipe_b, _ = _pipeline_b()
+    ref_a, _ = _pipeline()
+    server = CodedServer(mode="simulated")
+    server.register_model("a", pipe_a)
+    server.register_model("b", pipe_b)
+    frontend = ServingFrontend(server, port=0)
+    frontend.start()
+    url = frontend.url
+    try:
+        status, models = _http("GET", f"{url}/v1/models")
+        assert status == 200
+        assert {m["name"] for m in models["models"]} == {"a", "b"}
+        shapes = {m["name"]: tuple(m["input_shape"]) for m in models["models"]}
+        assert shapes == {"a": (2, 12, 12), "b": (3, 12, 12)}
+
+        x = np.asarray(_images(1)[0])
+        status, out = _http("POST", f"{url}/v1/infer",
+                            {"model": "a", "input": x.tolist()})
+        assert status == 200 and out["model"] == "a"
+        np.testing.assert_allclose(
+            np.asarray(out["output"], np.float32), np.asarray(ref_a.run(x)),
+            rtol=1e-4, atol=1e-4)
+        xb = np.asarray(_images_b(1)[0])
+        status, out_b = _http("POST", f"{url}/v1/infer",
+                              {"model": "b", "input": xb.tolist()})
+        assert status == 200 and out_b["shape"][0] == 4  # STACK_B out_ch
+
+        status, stats = _http("GET", f"{url}/v1/stats")
+        assert status == 200
+        assert stats["aggregate"]["completed"] == 2
+        assert stats["per_model"]["a"]["completed"] == 1
+        assert stats["per_model"]["b"]["completed"] == 1
+
+        with pytest.raises(urllib.error.HTTPError) as err:
+            _http("POST", f"{url}/v1/infer",
+                  {"model": "nope", "input": x.tolist()})
+        assert err.value.code == 404
+        with pytest.raises(urllib.error.HTTPError) as err:
+            _http("POST", f"{url}/v1/infer",
+                  {"model": "a", "input": [[1.0]]})
+        assert err.value.code == 400
+        # ambiguous model on a multi-model server is a client error ...
+        with pytest.raises(urllib.error.HTTPError) as err:
+            _http("POST", f"{url}/v1/infer", {"input": x.tolist()})
+        assert err.value.code == 400
+        # ... and so is a valid-JSON body that is not an object
+        with pytest.raises(urllib.error.HTTPError) as err:
+            _http("POST", f"{url}/v1/infer", 42)
+        assert err.value.code == 400
+        with pytest.raises(urllib.error.HTTPError) as err:
+            _http("GET", f"{url}/v1/nothing")
+        assert err.value.code == 404
+    finally:
+        frontend.shutdown()
+    # graceful drain: engine thread joined, worker pools released, port dead
+    assert server._thread is None
+    assert server.cluster._pools is None
+    assert not any(t.name == "coded-server-engine" and t.is_alive()
+                   for t in threading.enumerate())
+    with pytest.raises((urllib.error.URLError, ConnectionError, OSError)):
+        _http("GET", f"{url}/v1/models", timeout=2.0)
+    # idempotent
+    frontend.shutdown()
 
 
 # -- metrics --------------------------------------------------------------
