@@ -14,7 +14,7 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sizes (slow)")
-    ap.add_argument("--only", default=None, help="comma list: exp1..exp8,roofline")
+    ap.add_argument("--only", default=None, help="comma list: exp1..exp9,roofline")
     ap.add_argument("--batch", type=int, default=4,
                     help="batch size for the coded-pipeline sections (exp1/exp4)")
     args = ap.parse_args()
@@ -30,6 +30,7 @@ def main() -> None:
         exp6_serving,
         exp7_pallas_worker,
         exp8_multimodel,
+        exp9_fused_transitions,
         roofline_report,
     )
 
@@ -42,6 +43,7 @@ def main() -> None:
         "exp6": exp6_serving.run,
         "exp7": exp7_pallas_worker.run,
         "exp8": exp8_multimodel.run,
+        "exp9": exp9_fused_transitions.run,
         "roofline": roofline_report.run,
     }
     print("name,us_per_call,derived")

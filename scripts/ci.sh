@@ -7,9 +7,13 @@
 # serving-engine smoke benchmark (exp6, asserts the continuous-batching
 # server beats sequential run_pipeline under every straggler model), the
 # fused pallas-worker smoke benchmark (exp7, asserts the fused kernel
-# beats the unfused per-pair loop) and the multi-model serving smoke
+# beats the unfused per-pair loop), the multi-model serving smoke
 # benchmark (exp8, asserts two models on one shared coded pool beat two
-# isolated split-pool servers on aggregate throughput under stragglers).
+# isolated split-pool servers on aggregate throughput under stragglers),
+# and the partition-resident transition smoke benchmark (exp9, asserts
+# the fused decode->relu->pool->re-encode transition path beats the
+# full-tensor round trip summed over every layer boundary, with fp32
+# parity and the bounded-program contract checked inside).
 # Extra args are passed through to the main pytest run.
 #
 # Tests run with a per-test watchdog (tests/conftest.py, REPRO_TEST_TIMEOUT
@@ -27,7 +31,11 @@ python -m pytest -x -q -m "not slow" "$@"
 # (e.g. `-m ""` already ran the slow cases in the main suite above)
 if [[ "$*" != *"-m"* ]]; then
   python -m pytest -x -q -m "slow" tests/test_pipeline.py -k "pallas"
+  # fused-transition parity on the big archs, both backends (the fast
+  # lenet5 cases already ran in the main suite)
+  python -m pytest -x -q -m "slow" tests/test_fused_transitions.py
 fi
 python -m benchmarks.exp6_serving --smoke
 python -m benchmarks.exp7_pallas_worker --smoke
 python -m benchmarks.exp8_multimodel --smoke
+python -m benchmarks.exp9_fused_transitions --smoke

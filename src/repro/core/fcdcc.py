@@ -135,6 +135,22 @@ class CodedConv2d:
         )
         return group_by_worker(coded, self.a_code.ell)
 
+    def encode_from_partitions(self, parts: jnp.ndarray, matrix=None) -> jnp.ndarray:
+        """Encode pre-sliced APCP parts ``(k_a, [B,] C, h_hat, W+2p)``.
+
+        The partition-resident transition path: layer *i+1*'s parts are
+        assembled directly from layer *i*'s decoded partitions
+        (``repro.core.partition.partition_transition``), so the
+        ``apcp_partition`` step of ``encode_inputs`` is skipped.  ``matrix``
+        as in ``encode_inputs``.
+        """
+        self.input_encode_calls += 1
+        assert parts.shape[0] == self.plan.k_a, (parts.shape, self.plan)
+        coded = encode_tensor_list(
+            parts, self.a_code.matrix if matrix is None else matrix
+        )
+        return group_by_worker(coded, self.a_code.ell)
+
     def encode_filters(self, k: jnp.ndarray) -> jnp.ndarray:
         """(N,C,KH,KW) -> coded filters (n, ell_b, N/k_b, C, KH, KW)."""
         self.filter_encode_calls += 1
@@ -192,12 +208,16 @@ class CodedConv2d:
         )
 
     # -- master side: decode ------------------------------------------------
-    def decode(self, worker_ids, outputs: jnp.ndarray) -> jnp.ndarray:
-        """Any-delta decode + merge.
+    def decode_to_partitions(self, worker_ids, outputs: jnp.ndarray) -> jnp.ndarray:
+        """Any-delta decode to the partition grid — merge deliberately
+        skipped.
 
-        ``outputs``: (delta, ell2, *block) where block is
-        ``([B,] N/k_b, H'/k_a, W')`` — the batch dim (if any) just rides
-        inside the decoded rows.
+        ``outputs``: (delta, ell2, *block) with block
+        ``([B,] N/k_b, H'/k_a, W')``.  Returns the A-major
+        ``(k_a*k_b, *block)`` grid — the partition-resident transition path
+        (``CodedPipeline`` with ``fuse_transitions=True``) threads this
+        straight into the next layer's re-encode without ever assembling
+        the full ``([B,] N, H', W')`` tensor.
         """
         blocks = decode_blocks(
             self.a_code,
@@ -207,6 +227,16 @@ class CodedConv2d:
             outputs.shape[2:],
         )
         assert blocks.shape[-3:] == block_output_shape(self.geo)
+        return blocks
+
+    def decode(self, worker_ids, outputs: jnp.ndarray) -> jnp.ndarray:
+        """Any-delta decode + merge.
+
+        ``outputs``: (delta, ell2, *block) where block is
+        ``([B,] N/k_b, H'/k_a, W')`` — the batch dim (if any) just rides
+        inside the decoded rows.
+        """
+        blocks = self.decode_to_partitions(worker_ids, outputs)
         return merge_output(blocks, self.geo)
 
     # -- end-to-end paths ----------------------------------------------------

@@ -7,15 +7,41 @@ here is jit-safe (static shapes derived from a ``ConvGeometry``).
 leading batch dimension (``(B, C, H, W)`` / blocks ``(Q, B, N/k_b, ., .)``)
 so a whole request batch streams through one coded program — the single-image
 ``(C, H, W)`` form keeps working unchanged.
+
+Partition-resident transitions (beyond paper): because decode is linear and
+the APCP/KCCP grid tiles the output tensor, the inter-layer
+decode -> relu -> pool -> re-encode round trip never needs the merged
+``(B, C, H, W)`` tensor.  The helpers at the bottom of this module keep the
+activation in partition space end to end: ``partition_channel_merge``
+rejoins only the KCCP channel groups (the next ConvL convolves over the full
+channel axis, so channels must rejoin; the spatial axis stays partitioned),
+``partition_relu_pool`` applies ReLU + max-pool per spatial partition with
+halo rows exchanged between adjacent partitions (``gather_partition_rows``),
+and ``partition_apcp_slices`` re-slices the pooled partitions straight into
+the next layer's adaptive-padded APCP parts.  ``partition_transition``
+composes them; ``repro.core.pipeline.CodedPipeline`` jit-compiles one such
+transition program per (layer, bucket).
 """
 from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["ConvGeometry", "apcp_partition", "kccp_partition", "merge_output"]
+__all__ = [
+    "ConvGeometry",
+    "apcp_partition",
+    "kccp_partition",
+    "merge_output",
+    "partition_channel_merge",
+    "partition_pool_bounds",
+    "gather_partition_rows",
+    "partition_relu_pool",
+    "partition_apcp_slices",
+    "partition_transition",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,6 +188,185 @@ def merge_output(blocks: jnp.ndarray, geo: ConvGeometry) -> jnp.ndarray:
 
 def block_output_shape(geo: ConvGeometry) -> tuple[int, int, int]:
     return (geo.out_c_block, geo.out_h_block, geo.out_w)
+
+
+# -- partition-resident layer transitions ----------------------------------
+def partition_channel_merge(blocks: jnp.ndarray, geo: ConvGeometry) -> jnp.ndarray:
+    """Rejoin the KCCP channel groups of each spatial partition.
+
+    ``blocks``: decoded grid ``(k_a*k_b, [B,] N/k_b, H'/k_a, W')`` ordered
+    A-major.  The next ConvL convolves over the *full* channel axis, so the
+    ``k_b`` channel groups must rejoin at every transition; the spatial axis
+    stays partitioned.  Returns ``(k_a, [B,] N, H'/k_a, W')`` with the
+    zero-padded channels of the last group stripped.
+    """
+    q = geo.k_a * geo.k_b
+    assert blocks.shape[0] == q and blocks.shape[-3:] == (
+        geo.out_c_block,
+        geo.out_h_block,
+        geo.out_w,
+    ), (blocks.shape, geo)
+    grid = blocks.reshape((geo.k_a, geo.k_b) + blocks.shape[1:])
+    if blocks.ndim == 4:  # (k_a, k_b, nb, hb, Wo) -> (k_a, k_b*nb, hb, Wo)
+        y = grid.reshape((geo.k_a, geo.out_c_padded) + blocks.shape[-2:])
+        return y[:, : geo.out_channels]
+    # batched: (k_a, k_b, B, nb, hb, Wo) -> (k_a, B, k_b*nb, hb, Wo)
+    y = jnp.transpose(grid, (0, 2, 1, 3, 4, 5)).reshape(
+        (geo.k_a, blocks.shape[1], geo.out_c_padded) + blocks.shape[-2:]
+    )
+    return y[:, :, : geo.out_channels]
+
+
+def partition_pool_bounds(geo: ConvGeometry, pool: int) -> list[tuple[int, int]]:
+    """Static pooled-row ownership of each spatial partition.
+
+    Partition ``a`` owns the pooled rows whose ``pool``-row window *starts*
+    inside its row range ``[a*hb, (a+1)*hb)`` — every valid pooled row is
+    owned by exactly one partition, the ownership ranges are contiguous, and
+    rows whose window would read past ``out_h`` (the merged relu_pool's
+    floor-crop) are owned by nobody.  Returns ``[(lo, hi)] * k_a`` in pooled
+    row coordinates.
+    """
+    hb = geo.out_h_block
+    h_pool = geo.out_h // pool
+    bounds = []
+    for a in range(geo.k_a):
+        lo = min(-(-(a * hb) // pool), h_pool)
+        hi = min(-(-((a + 1) * hb) // pool), h_pool)
+        bounds.append((lo, max(hi, lo)))
+    return bounds
+
+
+def gather_partition_rows(parts, r0: int, r1: int) -> jnp.ndarray:
+    """Rows ``[r0, r1)`` of the virtual row-concatenation of the spatial
+    partitions — the halo-exchange primitive.
+
+    ``parts``: sequence of arrays with rows on axis -2 (ragged row counts
+    allowed).  A window straddling a partition boundary reads its trailing
+    rows from the following partition(s); everything is static slicing, so
+    inside jit this lowers to pure data movement.
+    """
+    assert r0 <= r1, (r0, r1)
+    segs = []
+    off = 0
+    for arr in parts:
+        rows = arr.shape[-2]
+        s0, s1 = max(r0 - off, 0), min(r1 - off, rows)
+        if s0 < s1:
+            segs.append(arr[..., s0:s1, :])
+        off += rows
+    got = sum(s.shape[-2] for s in segs)
+    assert got == r1 - r0, f"rows [{r0}, {r1}) exceed the {off} stacked rows"
+    if not segs:
+        ref = parts[0]
+        return jnp.zeros(ref.shape[:-2] + (0, ref.shape[-1]), ref.dtype)
+    return segs[0] if len(segs) == 1 else jnp.concatenate(segs, axis=-2)
+
+
+def partition_relu_pool(parts, geo: ConvGeometry, pool: int, *,
+                        relu: bool = True):
+    """ReLU + ``pool x pool`` max-pool per spatial partition, halos exchanged.
+
+    ``parts``: the ``k_a`` full-channel spatial partitions
+    ``([B,] C, hb, W')`` (e.g. from ``partition_channel_merge``).  Each
+    partition pools exactly the rows it owns (``partition_pool_bounds``);
+    windows straddling a boundary read halo rows from the neighbouring
+    partition(s), and the invalid zero-pad rows at the bottom of the last
+    partition are never touched.  ``relu=False`` skips the nonlinearity
+    (the fused transition applies it earlier, in the decode epilogue).
+
+    Returns ``(pooled_parts, bounds)`` — ragged lists in partition order;
+    concatenating ``pooled_parts`` on the row axis reproduces
+    ``relu_pool(merged)`` exactly (max/relu/slicing only, no float ops).
+    """
+    assert len(parts) == geo.k_a, (len(parts), geo.k_a)
+    if relu:
+        parts = [jax.nn.relu(p) for p in parts]
+    bounds = partition_pool_bounds(geo, pool)
+    if pool == 1:
+        pooled = [gather_partition_rows(parts, lo, hi) for lo, hi in bounds]
+        return pooled, bounds
+    wo = parts[0].shape[-1]
+    w2 = wo - wo % pool
+    pooled = []
+    for lo, hi in bounds:
+        rows = gather_partition_rows(parts, lo * pool, hi * pool)[..., :w2]
+        shape = rows.shape[:-2] + (hi - lo, pool, w2 // pool, pool)
+        pooled.append(jnp.max(rows.reshape(shape), axis=(-3, -1)))
+    return pooled, bounds
+
+
+def partition_apcp_slices(pooled, geo_next: ConvGeometry) -> jnp.ndarray:
+    """Re-slice pooled spatial partitions into the next layer's APCP parts.
+
+    ``pooled``: partition-ordered row segments covering pooled rows
+    ``[0, geo_next.height)`` (ragged heights fine).  Equivalent to
+    ``apcp_partition`` on the merged tensor: slice ``a`` covers virtual
+    padded rows ``[a*s_hat, a*s_hat + h_hat)`` where the virtual tensor is
+    ``padding`` zero rows, the real pooled rows, then the conv padding plus
+    the adaptive bottom zero-pad (Sec. IV-A1) — all assembled from the
+    partitions without ever merging.  The conv width padding is applied
+    once to the partitions up front (cheaper than padding each of the
+    row-overlapping output slices).  Returns
+    ``(k_a_next, [B,] C, h_hat, W + 2*padding)``.
+    """
+    h = geo_next.height
+    assert sum(seg.shape[-2] for seg in pooled) == h, (
+        [seg.shape for seg in pooled], geo_next,
+    )
+    assert pooled[0].shape[-1] == geo_next.width, (pooled[0].shape, geo_next)
+    p = geo_next.padding
+    if p:  # pad width once here, not once per overlapping slice
+        wpad = ((0, 0),) * (pooled[0].ndim - 1) + ((p, p),)
+        pooled = [jnp.pad(seg, wpad) for seg in pooled]
+    ref = pooled[0]
+
+    def zrows(n_rows):
+        return jnp.zeros(ref.shape[:-2] + (n_rows, ref.shape[-1]), ref.dtype)
+
+    out = []
+    for a in range(geo_next.k_a):
+        r0 = a * geo_next.s_hat - p
+        r1 = r0 + geo_next.h_hat
+        top = min(max(-r0, 0), geo_next.h_hat)  # rows above the real region
+        s0, s1 = max(r0, 0), min(r1, h)
+        mid = max(s1 - s0, 0)  # overlap with the real pooled rows
+        bot = geo_next.h_hat - top - mid  # conv padding + adaptive zero-pad
+        segs = []
+        if top:
+            segs.append(zrows(top))
+        if mid:
+            segs.append(gather_partition_rows(pooled, s0, s1))
+        if bot:
+            segs.append(zrows(bot))
+        out.append(segs[0] if len(segs) == 1
+                   else jnp.concatenate(segs, axis=-2))
+    return jnp.stack(out, axis=0)
+
+
+def partition_transition(blocks: jnp.ndarray, geo: ConvGeometry, pool: int,
+                         geo_next: ConvGeometry, *,
+                         relu: bool = False) -> jnp.ndarray:
+    """Decoded partition grid of layer *i* -> APCP parts of layer *i+1*.
+
+    ``blocks``: ``(k_a*k_b, [B,] N/k_b, H'/k_a, W')`` (already ReLU'd when
+    ``relu=False`` — the fused transition applies the nonlinearity in the
+    decode epilogue).  The composition of the three partition-space stages:
+    channels rejoin per spatial partition (``partition_channel_merge``),
+    ReLU + max-pool run per partition with halo rows exchanged between
+    adjacent partitions (``partition_relu_pool``), and the pooled
+    partitions re-slice straight into ``geo_next``'s adaptive-padded parts
+    (``partition_apcp_slices``) — the merged ``([B,] C, H, W)`` tensor is
+    never materialized.
+    """
+    assert geo.out_channels == geo_next.in_channels, (geo, geo_next)
+    assert geo_next.height == geo.out_h // pool, (geo, pool, geo_next)
+    spatial = partition_channel_merge(blocks, geo)
+    if relu:
+        spatial = jax.nn.relu(spatial)
+    parts = [spatial[a] for a in range(geo.k_a)]
+    pooled, _ = partition_relu_pool(parts, geo, pool, relu=False)
+    return partition_apcp_slices(pooled, geo_next)
 
 
 def np_reference_conv(x: np.ndarray, k: np.ndarray, stride: int, padding: int):

@@ -33,7 +33,8 @@ import numpy as np
 from .cost import CostWeights, optimal_partition
 from .crme import recovery_matrix
 from .fcdcc import CodedConv2d, FcdccPlan
-from .partition import ConvGeometry, merge_output
+from .nsctc import encode_tensor_list, group_by_worker
+from .partition import ConvGeometry, merge_output, partition_transition
 
 __all__ = [
     "CodedLayerSpec",
@@ -155,7 +156,8 @@ class CodedPipeline:
     def __init__(self, specs: Sequence[CodedLayerSpec], params: dict, *,
                  backend: str = "lax", fused_worker: bool = True,
                  interpret: bool = True,
-                 bucket_sizes: Sequence[int] | None = None):
+                 bucket_sizes: Sequence[int] | None = None,
+                 fuse_transitions: bool = False):
         specs = list(specs)
         if not specs:
             raise ValueError("empty pipeline")
@@ -168,6 +170,12 @@ class CodedPipeline:
         # pallas-only: interpret=True emulates the worker kernels on CPU,
         # False lowers them to Mosaic for real TPU hardware
         self.interpret = interpret
+        # partition-resident transitions: between ConvLs the activation is
+        # decoded only to the (k_a, k_b) partition grid, relu+pool run per
+        # spatial partition with halo exchange, and the partitions re-encode
+        # directly — one jitted transition program per (layer, bucket), no
+        # merged (B, C, H, W) round trip.  The final layer always merges.
+        self.fuse_transitions = fuse_transitions
         # batch-size buckets: callers pad request batches up to one of these
         # sizes (``pad_to_bucket``) so jit compiles a *bounded* set of batch
         # programs — one per (program, bucket), never one per batch size
@@ -190,6 +198,8 @@ class CodedPipeline:
         self._cluster_programs: dict[tuple, callable] = {}  # per-worker call
         self._batch_programs: dict[tuple, callable] = {}  # vmapped over workers
         self._decoders: dict[int, callable] = {}  # one per layer, any subset
+        self._transitions: dict[tuple, callable] = {}  # by transition key
+        self._all_encode_columns: dict[int, jnp.ndarray] = {}  # full-n, resident
 
     @staticmethod
     def normalize_buckets(bucket_sizes: Sequence[int]) -> tuple[int, ...]:
@@ -218,6 +228,44 @@ class CodedPipeline:
         """Distinct (program key, geometry) pairs — with bucketing, the jit
         trace count is bounded by ``num_geometries * len(bucket_sizes)``."""
         return len({(s.program_key, s.geo) for s in self.specs})
+
+    @staticmethod
+    def _transition_key(spec: CodedLayerSpec, nxt: CodedLayerSpec) -> tuple:
+        """Transition-program signature: everything the traced program
+        closes over.  Adjacent layer pairs sharing it share one jitted
+        program (e.g. VGG-16's repeated same-shape conv blocks), exactly
+        as ``worker_program`` shares by ``program_key``."""
+        return (spec.geo, spec.pool, nxt.geo, nxt.plan.ell_a)
+
+    @property
+    def num_transitions(self) -> int:
+        """Distinct fused transition-program signatures across adjacent
+        ConvL pairs when ``fuse_transitions`` (repeated transition
+        geometries share one program), else zero."""
+        if not self.fuse_transitions:
+            return 0
+        return len({
+            self._transition_key(s, n)
+            for s, n in zip(self.specs, self.specs[1:])
+        })
+
+    @property
+    def transition_program_traces(self) -> int:
+        """Shape-specialized compilations across the jitted transition
+        programs — bounded by ``num_transitions * len(bucket_sizes)``."""
+        return sum(
+            fn._cache_size() if hasattr(fn, "_cache_size") else 1
+            for fn in self._transitions.values()
+        )
+
+    @property
+    def program_trace_bound(self) -> int:
+        """The bounded-program contract under bucketing: worker-program plus
+        transition-program traces never exceed (worker geometries + fused
+        transition geometries) x buckets, no matter how many distinct batch
+        sizes or survivor subsets the server has seen."""
+        buckets = len(self.bucket_sizes) if self.bucket_sizes else 1
+        return (self.num_geometries + self.num_transitions) * buckets
 
     @property
     def filter_encode_calls(self) -> int:
@@ -264,19 +312,23 @@ class CodedPipeline:
             f"batch {batch} exceeds the largest bucket {self.bucket_sizes[-1]}"
         )
 
-    def pad_to_bucket(self, x: jnp.ndarray) -> tuple[jnp.ndarray, int]:
-        """Zero-pad a ``(B, C, H, W)`` batch up to its bucket size.
+    def pad_to_bucket(self, x: jnp.ndarray, axis: int = 0) -> tuple[jnp.ndarray, int]:
+        """Zero-pad a batch up to its bucket size along ``axis``.
 
-        Returns ``(padded, real_batch)``; the caller slices the first
-        ``real_batch`` rows of the output.  Padding rows are zeros — they
-        ride through the linear code and the convs as dead weight and are
-        dropped after decode."""
-        b = x.shape[0]
+        ``axis=0`` is the plain ``(B, C, H, W)`` batch; partition-resident
+        serving also pads mid-stack coded-share state (batch on axis 2 of
+        ``(n, ell_a, B, C, h_hat, Wp)``).  Returns ``(padded, real_batch)``;
+        the caller keeps the first ``real_batch`` rows along ``axis``.
+        Padding rows are zeros — a zero activation encodes to zero shares,
+        convolves to zero, and stays zero through relu/pool/halo, so they
+        ride the whole coded stack as dead weight and are dropped at the
+        end."""
+        b = x.shape[axis]
         bucket = self.bucketize(b)
         if bucket == b:
             return x, b
-        pad = jnp.zeros((bucket - b,) + x.shape[1:], x.dtype)
-        return jnp.concatenate([x, pad], axis=0), b
+        pad_shape = x.shape[:axis] + (bucket - b,) + x.shape[axis + 1:]
+        return jnp.concatenate([x, jnp.zeros(pad_shape, x.dtype)], axis=axis), b
 
     # -- program caches ----------------------------------------------------
     def encoder(self, idx: int):
@@ -321,6 +373,20 @@ class CodedPipeline:
             [code.worker_columns(i) for i in worker_ids], axis=1
         )
 
+    def encode_columns_all(self, idx: int) -> jnp.ndarray:
+        """The full-n A-code encode columns of layer ``idx`` as a resident
+        device array.  Unlike the timing-dependent subsets of
+        ``encode_columns``, the all-workers matrix is one fixed constant
+        per layer, so it is cached (one entry per layer, bounded) — the
+        cluster's fused transition rounds re-encode for all n workers
+        every round and must not rebuild + re-upload it each time."""
+        m = self._all_encode_columns.get(idx)
+        if m is None:
+            m = self._all_encode_columns[idx] = jnp.asarray(
+                self.layers[idx].a_code.matrix
+            )
+        return m
+
     def decode_matrix(self, idx: int, worker_ids: tuple[int, ...]) -> np.ndarray:
         """The QxQ decode inverse for layer ``idx`` under the given
         surviving-worker subset (host-side float64).  Computed per call —
@@ -361,6 +427,63 @@ class CodedPipeline:
         d = jnp.asarray(self.decode_matrix(idx, worker_ids))
         return lambda outs: fn(outs, d)
 
+    def transition_fn(self, idx: int):
+        """The jitted partition-resident transition program between ConvL
+        ``idx`` and ``idx + 1``, taking ``(outs, decode_matrix,
+        next_encode_columns)``.
+
+        One program fuses the whole inter-layer round trip: decode layer
+        ``idx``'s fastest-delta outputs only to the ``(k_a, k_b)`` grid,
+        ReLU (in the decode epilogue), per-partition max-pool with halo
+        exchange, re-slice into layer ``idx + 1``'s adaptive-padded APCP
+        parts, and re-encode — the merged ``(B, C, H, W)`` tensor is never
+        materialized.  The decode inverse and the next layer's encode
+        columns are *runtime arguments* (constant shapes), so any
+        timing-dependent survivor subset and any next-round worker
+        selection reuse the one program per (transition geometry, bucket)
+        — the bounded-program contract extends to transitions, and
+        adjacent pairs with the same transition signature (repeated conv
+        blocks) share one program.
+        """
+        if not 0 <= idx < len(self.specs) - 1:
+            raise ValueError(f"no transition after layer {idx} "
+                             f"({len(self.specs)} layers)")
+        key = self._transition_key(self.specs[idx], self.specs[idx + 1])
+        fn = self._transitions.get(key)
+        if fn is None:
+            spec, nxt = self.specs[idx], self.specs[idx + 1]
+            q = spec.plan.k_a * spec.plan.k_b
+            ell_next = nxt.plan.ell_a
+            geo, pool, geo_next = spec.geo, spec.pool, nxt.geo
+
+            def assemble(blocks):
+                # relu already applied by the decode epilogue
+                return partition_transition(blocks, geo, pool, geo_next,
+                                            relu=False)
+
+            if self.backend == "pallas":
+                from repro.kernels.conv2d.ops import coded_transition
+
+                interpret = self.interpret
+
+                def trans(outs, d, m_next):
+                    coded = coded_transition(outs, d, m_next, assemble,
+                                             interpret=interpret)
+                    return group_by_worker(coded, ell_next)
+            else:
+                def trans(outs, d, m_next):
+                    rows = outs.reshape(outs.shape[0] * outs.shape[1], -1)
+                    blocks = jax.nn.relu(
+                        (d.astype(rows.dtype) @ rows)
+                        .reshape((q,) + outs.shape[2:])
+                    )
+                    parts = assemble(blocks)
+                    coded = encode_tensor_list(parts, m_next)
+                    return group_by_worker(coded, ell_next)
+
+            fn = self._transitions[key] = jax.jit(trans)
+        return fn
+
     # -- execution ---------------------------------------------------------
     def layer_worker_ids(self, idx: int, worker_ids=None) -> tuple[int, ...]:
         """The survivors layer ``idx`` decodes from: the first delta of the
@@ -380,7 +503,13 @@ class CodedPipeline:
         ``x``: ``(B, C, H, W)`` batch or a single ``(C, H, W)`` image.
         ``worker_ids``: the available workers (any >= delta subset of n per
         layer decodes to the same output); default all n.
+
+        With ``fuse_transitions`` the stack runs on the partition-resident
+        path: survivor subsets are pre-picked per layer (same first-delta
+        rule) and the inter-layer rounds stay in partition space.
         """
+        if self.fuse_transitions:
+            return self.run_prepared(x, self.prepare(worker_ids))
         squeeze = x.ndim == 3
         if squeeze:
             x = x[None]
@@ -442,6 +571,23 @@ class CodedPipeline:
         squeeze = x.ndim == 3
         if squeeze:
             x = x[None]
+        if self.fuse_transitions:
+            # partition-resident path: encode once into layer 0's shares,
+            # then thread coded partition-space state between layers — the
+            # transition of layer i re-encodes directly for layer i+1's
+            # selected workers; only the final layer merges to a tensor.
+            last = len(self.specs) - 1
+            self.input_encode_calls += 1
+            xe = self.encoder(0)(x, prepared[0][0])
+            for idx, (m_sel, sel, d) in enumerate(prepared):
+                outs = self.worker_program(idx)(
+                    xe, self.coded_filters[idx][sel]
+                )
+                if idx < last:
+                    xe = self.transition_fn(idx)(outs, d, prepared[idx + 1][0])
+                else:
+                    x = self.decoder_fn(idx)(outs, d)
+            return x[0] if squeeze else x
         for idx, (m_sel, sel, d) in enumerate(prepared):
             self.input_encode_calls += 1
             xe = self.encoder(idx)(x, m_sel)
@@ -463,6 +609,7 @@ def build_cnn_pipeline(
     backend: str = "lax",
     interpret: bool = True,
     bucket_sizes: Sequence[int] | None = None,
+    fuse_transitions: bool = False,
 ) -> CodedPipeline:
     """Compile one of the named CNNs (``lenet5``/``alexnet``/``vgg16``) into
     a ``CodedPipeline`` (lazy model import keeps core free of model deps)."""
@@ -479,4 +626,5 @@ def build_cnn_pipeline(
         weights=weights,
     )
     return CodedPipeline(specs, params, backend=backend, interpret=interpret,
-                         bucket_sizes=bucket_sizes)
+                         bucket_sizes=bucket_sizes,
+                         fuse_transitions=fuse_transitions)

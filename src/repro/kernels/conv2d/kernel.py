@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 from repro.kernels.matmul.kernel import matmul_pallas
 
-__all__ = ["conv2d_im2col_pallas", "coded_worker_pallas"]
+__all__ = ["conv2d_im2col_pallas", "coded_worker_pallas",
+           "coded_transition_pallas"]
 
 
 def conv2d_im2col_pallas(
@@ -82,3 +83,46 @@ def coded_worker_pallas(
     y = out.reshape(ea, b, ho, wo, eb, nb)
     y = jnp.transpose(y, (0, 4, 1, 5, 2, 3)).reshape(ea * eb, b, nb, ho, wo)
     return y if batched else y[:, 0]
+
+
+def coded_transition_pallas(
+    outs: jnp.ndarray,
+    d: jnp.ndarray,
+    m_next: jnp.ndarray,
+    assemble,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """One partition-resident layer transition: decode-GEMM (ReLU fused into
+    the tile-sweep epilogue) -> partition-space pool/halo re-slice ->
+    encode-GEMM, compiled as a single program.
+
+    The round-trip path runs decode+merge, a separate elementwise
+    relu/pool over the assembled ``([B,] N, H', W')`` tensor, then
+    ``apcp_partition`` + encode from scratch.  Here the activation never
+    leaves partition space: the decode is one MXU tile sweep over
+    ``d (Q, Q) @ rows (Q, F)`` with the ReLU applied in-register at the
+    flush (``matmul_pallas(relu=True)``), ``assemble`` (the
+    geometry-specialized ``partition_transition`` closure passed in from
+    ``CodedPipeline`` — pure static slicing/max, traced inline) exchanges
+    halo rows and re-slices the pooled partitions, and the re-encode is a
+    second tile sweep ``m_next^T (L, k_a') @ parts (k_a', F')``.  The pool
+    between the two GEMMs is a nonlinearity, so two sweeps is the minimum —
+    but both run inside one jitted program with no merged-tensor round trip.
+
+    ``outs``: fastest-delta worker outputs ``(delta, ell2, *block)``;
+    ``d``: the ``(Q, Q)`` decode inverse; ``m_next``: the next layer's
+    A-code encode columns ``(k_a', L)``.  Returns the coded next-layer
+    input shares ``(L, *part)`` (worker-grouping is the caller's job).
+    """
+    q = d.shape[0]
+    rows = outs.reshape(outs.shape[0] * outs.shape[1], -1)
+    decoded = matmul_pallas(
+        d.astype(rows.dtype), rows, relu=True, interpret=interpret
+    )
+    blocks = decoded.reshape((q,) + outs.shape[2:])
+    parts = assemble(blocks)  # (k_a', [B,] C, h_hat', W'+2p')
+    k2 = parts.shape[0]
+    cols = m_next.astype(parts.dtype)  # (k_a', L)
+    coded = matmul_pallas(cols.T, parts.reshape(k2, -1), interpret=interpret)
+    return coded.reshape((cols.shape[1],) + parts.shape[1:])

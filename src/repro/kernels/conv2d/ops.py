@@ -4,9 +4,13 @@
 ``pl.pallas_call``): ``True`` emulates the kernel on CPU (this container),
 ``False`` lowers to Mosaic on real TPU hardware.
 """
-from .kernel import coded_worker_pallas, conv2d_im2col_pallas
+from .kernel import (
+    coded_transition_pallas,
+    coded_worker_pallas,
+    conv2d_im2col_pallas,
+)
 
-__all__ = ["conv2d_im2col", "coded_worker"]
+__all__ = ["conv2d_im2col", "coded_worker", "coded_transition"]
 
 
 def conv2d_im2col(x, k, stride=1, padding=0, *, interpret=True):
@@ -16,3 +20,10 @@ def conv2d_im2col(x, k, stride=1, padding=0, *, interpret=True):
 def coded_worker(xe, ke, stride=1, *, interpret=True):
     """Fused batched coded-worker subtask: one im2col + one MXU GEMM."""
     return coded_worker_pallas(xe, ke, stride, interpret=interpret)
+
+
+def coded_transition(outs, d, m_next, assemble, *, interpret=True):
+    """Fused partition-resident layer transition: decode-GEMM with ReLU
+    epilogue -> partition-space pool/halo re-slice -> encode-GEMM."""
+    return coded_transition_pallas(outs, d, m_next, assemble,
+                                   interpret=interpret)

@@ -17,7 +17,8 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["matmul_pallas"]
 
 
-def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int,
+                   relu: bool = False):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -28,11 +29,15 @@ def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
 
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        acc = acc_ref[...]
+        if relu:  # fused epilogue: applied in-register before the HBM write
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc.astype(o_ref.dtype)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "out_dtype")
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "out_dtype",
+                              "relu")
 )
 def matmul_pallas(
     a: jnp.ndarray,
@@ -43,11 +48,16 @@ def matmul_pallas(
     bk: int = 128,
     interpret: bool = True,
     out_dtype=None,
+    relu: bool = False,
 ) -> jnp.ndarray:
     """``a @ b`` with explicit VMEM tiling.  Shapes padded to block grid.
 
     ``interpret=True`` runs the kernel body in Python on CPU (this container
     has no TPU); on real hardware pass ``interpret=False``.
+
+    ``relu=True`` fuses ``max(., 0)`` into the flush epilogue — the output
+    tile is rectified in-register on the last K step, so a GEMM-then-ReLU
+    consumer (the coded transition's decode) costs no extra pass over HBM.
     """
     m, k = a.shape
     k2, n = b.shape
@@ -61,7 +71,7 @@ def matmul_pallas(
     k_steps = kp // bk_
 
     out = pl.pallas_call(
-        functools.partial(_matmul_kernel, k_steps=k_steps),
+        functools.partial(_matmul_kernel, k_steps=k_steps, relu=relu),
         grid=(mp // bm_, np_ // bn_, k_steps),
         in_specs=[
             pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),

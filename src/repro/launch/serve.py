@@ -91,9 +91,13 @@ def _check_cnn_archs(archs) -> None:
 
 def build_cnn_server(archs, *, workers: int, stragglers: int,
                      straggler_delay: float, smoke: bool, kab=(2, 4),
-                     mode: str = "threads", seed: int = 0):
+                     mode: str = "threads", seed: int = 0,
+                     fuse_transitions: bool = False):
     """One multi-model ``CodedServer``: every arch's pipeline resident on
-    the same n-worker pool (its own scheduler/buckets per model)."""
+    the same n-worker pool (its own scheduler/buckets per model).
+    ``fuse_transitions`` serves on the partition-resident path (batches
+    advance between ConvLs as coded partition shares, no full-activation
+    round trip)."""
     from repro.core.pipeline import build_cnn_pipeline
     from repro.models.cnn import init_cnn, input_hw
     from repro.runtime import StragglerModel
@@ -109,6 +113,7 @@ def build_cnn_server(archs, *, workers: int, stragglers: int,
         server.register_model(arch, build_cnn_pipeline(
             arch, params, workers, default_kab=kab,
             input_hw=input_hw(arch, smoke=smoke),
+            fuse_transitions=fuse_transitions,
         ))
     return server
 
@@ -116,7 +121,8 @@ def build_cnn_server(archs, *, workers: int, stragglers: int,
 def serve_cnn(archs, *, requests: int, workers: int, stragglers: int,
               straggler_delay: float, smoke: bool, kab=(2, 4),
               mode: str = "threads", seed: int = 0,
-              http_port: int | None = None):
+              http_port: int | None = None,
+              fuse_transitions: bool = False):
     """Serve one or several CNN archs from one shared coded worker pool.
 
     Without ``--http-port``: fire ``requests`` concurrent single-image
@@ -132,7 +138,7 @@ def serve_cnn(archs, *, requests: int, workers: int, stragglers: int,
     server = build_cnn_server(
         archs, workers=workers, stragglers=stragglers,
         straggler_delay=straggler_delay, smoke=smoke, kab=kab, mode=mode,
-        seed=seed,
+        seed=seed, fuse_transitions=fuse_transitions,
     )
     server.warmup()
 
@@ -215,18 +221,23 @@ def main():
     ap.add_argument("--http-port", type=int, default=None,
                     help="serve the JSON front-end on this port (CNN only; "
                          "0 = ephemeral)")
+    ap.add_argument("--fuse-transitions", action="store_true",
+                    help="partition-resident layer transitions: batches "
+                         "advance between ConvLs as coded partition shares "
+                         "(CNN only)")
     args = ap.parse_args()
     archs = args.arch or ["qwen3-4b"]
     if all(a in CNN_SPECS for a in archs):
         serve_cnn(archs, requests=args.requests, workers=args.workers,
                   stragglers=args.stragglers,
                   straggler_delay=args.straggler_delay, smoke=args.smoke,
-                  mode=args.mode, http_port=args.http_port)
+                  mode=args.mode, http_port=args.http_port,
+                  fuse_transitions=args.fuse_transitions)
         return
-    if len(archs) > 1 or args.http_port is not None:
+    if len(archs) > 1 or args.http_port is not None or args.fuse_transitions:
         raise SystemExit(
-            f"multi-model / --http-port serving is CNN-only "
-            f"(valid CNN archs: {sorted(CNN_SPECS)}); got {archs}"
+            f"multi-model / --http-port / --fuse-transitions serving is "
+            f"CNN-only (valid CNN archs: {sorted(CNN_SPECS)}); got {archs}"
         )
     if archs[0] not in ARCH_IDS:
         raise SystemExit(

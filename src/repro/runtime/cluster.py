@@ -427,18 +427,37 @@ class FcdccCluster:
         across concurrent request batches — of all registered models —
         (``repro.serving.CodedServer`` admits new arrivals exactly at these
         layer boundaries).  ``model`` selects the pipeline namespace.
+
+        With a ``fuse_transitions`` pipeline the state carried between
+        rounds is *partition-resident*: layer 0 takes the raw
+        ``(B, C, H, W)`` batch and encodes it; every non-final round
+        returns the next layer's coded input shares
+        ``(n, ell_a, B, C, h_hat, Wp)`` (the fastest-delta outputs are
+        decoded only to the partition grid, relu/pool run per partition
+        with halo exchange, and the re-encode targets all n workers so the
+        next round again keeps the fastest delta); only the final round
+        merges to the full tensor.  ``x`` for ``idx > 0`` must then be the
+        shares returned by the previous round.  The transition replaces the
+        separate encode step, so ``encode_s`` is folded into ``decode_s``
+        for those rounds.
         """
         pipe = self.get_pipeline(model)
         spec = pipe.specs[idx]
         delta = spec.plan.delta
+        fused = pipe.fuse_transitions
+        last = idx == len(pipe.specs) - 1
         # the pipeline's own filters, not the name-keyed store: a later
         # preload/run_layer under a colliding layer name must not swap
         # in foreign filters under this pipeline's decode
         ke = pipe.coded_filters[idx]
 
         t0 = time.perf_counter()
-        xe = jax.block_until_ready(pipe.encoder(idx)(x))
-        t_encode = time.perf_counter() - t0
+        if fused and idx > 0:
+            xe = x  # coded shares from the previous round's transition
+            t_encode = 0.0
+        else:
+            xe = jax.block_until_ready(pipe.encoder(idx)(x))
+            t_encode = time.perf_counter() - t0
 
         compute = pipe.worker_program(idx, over_workers=False)
         # first sight of these shapes: compile outside the timed collect so
@@ -455,9 +474,22 @@ class FcdccCluster:
         ids = list(results)[:delta]
         outs = np.stack([np.asarray(results[i]) for i in ids], axis=0)
         t2 = time.perf_counter()
-        y = jax.block_until_ready(
-            pipe.decoder(idx, tuple(ids))(jax.numpy.asarray(outs))
-        )
+        if fused and not last:
+            # partition-resident transition straight into the next layer's
+            # coded shares for ALL n workers (the next collect again keeps
+            # whichever delta finish first); the all-n encode columns are a
+            # per-layer constant resident on device
+            d = jax.numpy.asarray(pipe.decode_matrix(idx, tuple(ids)))
+            y = jax.block_until_ready(
+                pipe.transition_fn(idx)(
+                    jax.numpy.asarray(outs), d,
+                    pipe.encode_columns_all(idx + 1),
+                )
+            )
+        else:
+            y = jax.block_until_ready(
+                pipe.decoder(idx, tuple(ids))(jax.numpy.asarray(outs))
+            )
         t_decode = time.perf_counter() - t2
         return y, LayerTiming(t_encode, t_compute, t_decode, worker_times,
                               ids, spec.name)

@@ -37,6 +37,18 @@ Batch sizes are padded to each pipeline's ``bucket_sizes``, so jit compiles
 one program per (layer, bucket) — ``warmup()`` pre-traces them all, and the
 trace count summed over models stays bounded by geometries x buckets no
 matter how request batch sizes vary.
+
+A pipeline built with ``fuse_transitions=True`` serves on the
+partition-resident path: between ConvL boundaries a batch's state is the
+next layer's coded input shares (decode only to the partition grid,
+relu/pool per spatial partition with halo exchange, re-encode — one fused
+transition program per (layer, bucket)), and the full activation tensor is
+materialized only at the final layer.  Late admission is unchanged (new
+batches enter at layer 0 with raw images) and coalescing merges
+partition-space batches on their coded-share batch axis.
+``register_model(..., weight=w)`` sets the integer fair share: the rotating
+sweep grants a model up to ``w`` consecutive rounds per sweep position, so
+a backlogged model waits at most the sum of the other models' weights.
 """
 from __future__ import annotations
 
@@ -60,11 +72,22 @@ DEFAULT_BUCKETS = (1, 2, 4, 8)
 
 @dataclasses.dataclass
 class _ModelState:
-    """Engine-side state of one registered model."""
+    """Engine-side view of one registered model.
+
+    The name -> pipeline registry lives ONLY in the cluster
+    (``FcdccCluster.pipelines``, written by ``load_pipeline``); this object
+    holds the serving-side extras (the direct-mode survivor plan) and
+    resolves ``pipeline`` through the cluster — so the engine and the
+    cluster can never disagree about what is resident.  The fair-share
+    weight likewise lives only in the ``MultiScheduler``."""
 
     name: str
-    pipeline: CodedPipeline
+    cluster: FcdccCluster
     prepared: tuple | None = None  # direct-mode survivor plan, built lazily
+
+    @property
+    def pipeline(self) -> CodedPipeline:
+        return self.cluster.pipelines[self.name]
 
 
 class CodedServer:
@@ -108,7 +131,8 @@ class CodedServer:
                  mode: str = "simulated", execution: str = "cluster",
                  backend: str = "lax", interpret: bool = True,
                  bucket_sizes=None, max_inflight: int = 2,
-                 model: str | None = None) -> "CodedServer":
+                 model: str | None = None,
+                 fuse_transitions: bool = False) -> "CodedServer":
         """Compile a named CNN (``lenet5``/``alexnet``/``vgg16``) into a
         bucketed resident pipeline and wrap a server around it; the model
         registers under ``model`` (default: the arch name).  Register more
@@ -116,12 +140,16 @@ class CodedServer:
 
         ``backend="pallas"`` serves every bucketed batch program through the
         fused coded-worker Pallas kernel; ``interpret=False`` lowers those
-        kernels to real TPU hardware instead of CPU emulation."""
+        kernels to real TPU hardware instead of CPU emulation.
+        ``fuse_transitions=True`` serves on the partition-resident path:
+        batches advance between ConvL boundaries as coded partition shares,
+        never materializing the full activation between layers."""
         pipeline = build_cnn_pipeline(
             name, params, n, q=q, default_kab=default_kab, input_hw=input_hw,
             backend=backend, interpret=interpret,
             bucket_sizes=(bucket_sizes if bucket_sizes is not None
                           else DEFAULT_BUCKETS),
+            fuse_transitions=fuse_transitions,
         )
         return cls(pipeline, straggler, mode=mode, execution=execution,
                    max_inflight=max_inflight,
@@ -129,19 +157,29 @@ class CodedServer:
 
     # -- model registry ------------------------------------------------------
     def register_model(self, name: str, pipeline: CodedPipeline, *,
-                       bucket_sizes=None, max_inflight: int | None = None
-                       ) -> None:
+                       bucket_sizes=None, max_inflight: int | None = None,
+                       weight: int = 1) -> None:
         """Load ``pipeline`` as model ``name`` onto the shared worker pool.
 
         The first registration creates the cluster (inheriting the
         pipeline's backend/interpret); later ones must target the same
         worker count and backend.  Each model gets its own scheduler
         (queue, buckets, in-flight capacity) — registration happens before
-        ``start()``."""
+        ``start()``.  The pipeline registry itself is the cluster's
+        ``pipelines`` mapping (one source of truth); ``self.models`` holds
+        only the per-model serving state viewing it.
+
+        ``weight`` is the integer fair share: the engine's rotating sweep
+        grants the model up to ``weight`` consecutive layer rounds per
+        sweep position, so under contention round counts converge to the
+        weight ratio (a backlogged model waits at most the sum of the
+        other models' weights between its rounds)."""
         if self._thread is not None:
             raise RuntimeError("register models before start()")
         if name in self.models:
             raise ValueError(f"model {name!r} already registered")
+        if not isinstance(weight, int) or weight < 1:
+            raise ValueError(f"weight must be an integer >= 1, got {weight!r}")
         # validate shared-pool compatibility BEFORE any mutation: a failed
         # registration must not leave the caller's pipeline re-bucketed
         if self.cluster is not None:
@@ -184,8 +222,9 @@ class CodedServer:
             name, pipeline.pad_to_bucket, max_batch=pipeline.max_batch,
             max_inflight=(max_inflight if max_inflight is not None
                           else self._default_max_inflight),
+            weight=weight,
         )
-        self.models[name] = _ModelState(name, pipeline)
+        self.models[name] = _ModelState(name, self.cluster)
 
     def model_names(self) -> list[str]:
         return list(self.models)
@@ -356,18 +395,27 @@ class CodedServer:
         """Advance one batch — by one ConvL (cluster execution, so other
         batches and new arrivals of any model interleave at layer
         boundaries) or through the whole prepared stack (direct)."""
+        pipe = state.pipeline
         if self.execution == "direct":
             batch.x = jax.block_until_ready(
-                state.pipeline.run_prepared(batch.x, self._direct_plan(state))
+                pipe.run_prepared(batch.x, self._direct_plan(state))
             )
-            batch.layer_idx = len(state.pipeline.specs)
+            batch.layer_idx = len(pipe.specs)
         else:
             batch.x, timing = self.cluster.run_pipeline_layer(
                 batch.layer_idx, batch.x, state.name
             )
             batch.timings.append(timing)
             batch.layer_idx += 1
-        if batch.layer_idx >= len(state.pipeline.specs):
+            # partition-resident pipelines carry coded shares between
+            # rounds — the request batch sits on axis 2 of
+            # (n, ell_a, B, C, h_hat, Wp) until the final merge, and
+            # coalescing/padding must slice that axis
+            batch.batch_axis = (
+                2 if pipe.fuse_transitions
+                and 0 < batch.layer_idx < len(pipe.specs) else 0
+            )
+        if batch.layer_idx >= len(pipe.specs):
             self._complete(state, batch)
 
     def _complete(self, state: _ModelState, batch: ScheduledBatch) -> None:
@@ -395,12 +443,18 @@ class CodedServer:
         """The ``prepare`` plan over pre-picked survivors: dead workers
         excluded, remaining sorted by injected delay (fastest first) so each
         layer decodes from the delta best.  Cached per model — every batch
-        reuses it until the straggler model changes."""
+        reuses it until the straggler model changes, or until the resident
+        pipeline under this name is replaced (the cache holds the pipeline
+        reference itself and compares by identity — not ``id()``, whose
+        values CPython reuses after GC — so a plan prepared against old
+        encode/decode matrices can never serve the replacement)."""
         delays = self.cluster.straggler.delays
+        pipe = state.pipeline
         key = tuple(np.asarray(delays).tolist())
-        if state.prepared is None or state.prepared[0] != key:
+        if (state.prepared is None or state.prepared[0] is not pipe
+                or state.prepared[1] != key):
             alive = [i for i in range(self.cluster.n)
                      if np.isfinite(delays[i])]
             alive.sort(key=lambda i: (delays[i], i))
-            state.prepared = (key, state.pipeline.prepare(alive))
-        return state.prepared[1]
+            state.prepared = (pipe, key, pipe.prepare(alive))
+        return state.prepared[2]

@@ -9,6 +9,14 @@ deps) in front of the engine:
     blocks on the request handle, so HTTP concurrency maps 1:1 onto engine
     concurrency — concurrent posts land in the same continuous batches.
     Replies ``{"model", "request_id", "shape", "output", "latency_s"}``.
+    Batched form: ``{"model": "...", "inputs": [t1, t2, ...]}`` submits
+    every image in one round trip — all of them fan out to the engine
+    *before* the handler blocks, so they ride the same continuous batches
+    — and replies ``{"model", "count", "results": [...]}`` with one entry
+    per input in order: the single-image payload on success, or
+    ``{"error": "..."}`` for that item alone (one bad image never fails
+    its siblings; an engine that is down or draining is a request-level
+    503, same as the single form).
   * ``GET /v1/models``  — registered models with input shape/dtype, layer
     count and bucket sizes.
   * ``GET /v1/stats``   — aggregate + per-model ``ServingStats``.
@@ -100,37 +108,84 @@ class _Handler(BaseHTTPRequestHandler):
             if not isinstance(payload, dict):
                 raise ValueError(f"body must be a JSON object, "
                                  f"got {type(payload).__name__}")
-            x = np.asarray(payload["input"], dtype=np.float32)
+            if "inputs" in payload:
+                if "input" in payload:
+                    raise ValueError("pass either 'input' or 'inputs', not both")
+                raw = payload["inputs"]
+                if not isinstance(raw, list) or not raw:
+                    raise ValueError("'inputs' must be a non-empty list of "
+                                     "(C, H, W) tensors")
+                batch = list(raw)
+            else:
+                batch = None
+                x = np.asarray(payload["input"], dtype=np.float32)
         except (ValueError, TypeError, KeyError, json.JSONDecodeError) as err:
             self._error(400, f"bad request body: {err}")
             return
         model = payload.get("model")
+        if not self.engine.models:
+            self._error(503, "no model registered")
+            return
         if model is not None and model not in self.engine.models:
             self._error(404, f"unknown model {model!r}; registered: "
                              f"{sorted(self.engine.models)}")
             return
-        try:
-            handle = self.engine.submit(x, model)
-        except ValueError as err:  # wrong shape / model field required
-            self._error(400, str(err))
+        if model is None and len(self.engine.models) > 1:
+            self._error(400, f"{len(self.engine.models)} models registered "
+                             f"({sorted(self.engine.models)}); pass model=")
             return
-        except RuntimeError as err:  # engine not running / draining
-            self._error(503, str(err))
+        resolved = (model if model is not None
+                    else self.engine.model_names()[0])
+        if batch is None:
+            try:
+                handle = self.engine.submit(x, model)
+            except ValueError as err:  # wrong shape / model field required
+                self._error(400, str(err))
+                return
+            except RuntimeError as err:  # engine not running / draining
+                self._error(503, str(err))
+                return
+            item = self._gather(handle)
+            if "error" in item:
+                self._error(503, item["error"])
+                return
+            self._reply(200, {"model": resolved, **item})
             return
-        try:
-            y = handle.result(timeout=self.result_timeout_s)
-        except Exception as err:  # degraded cluster, engine shutdown, ...
-            self._error(503, f"{type(err).__name__}: {err}")
-            return
-        y = np.asarray(y)
+        # batched: fan every image out BEFORE blocking on any result, so
+        # the whole list rides the engine's continuous batches in one HTTP
+        # round trip; per-ITEM problems (bad tensor, wrong shape) are
+        # reported per item and never fail siblings, while engine-down is a
+        # request-level condition and answers 503 like the single form
+        handles = []
+        for i, raw_x in enumerate(batch):
+            try:
+                xi = np.asarray(raw_x, dtype=np.float32)
+                handles.append(self.engine.submit(xi, model))
+            except (ValueError, TypeError) as err:  # bad tensor / shape
+                handles.append(f"bad input [{i}]: {err}")
+            except RuntimeError as err:  # engine not running / draining
+                self._error(503, str(err))
+                return
+        results = [{"error": h} if isinstance(h, str) else self._gather(h)
+                   for h in handles]
         self._reply(200, {
-            "model": model if model is not None
-            else self.engine.model_names()[0],
+            "model": resolved,
+            "count": len(results),
+            "results": results,
+        })
+
+    def _gather(self, handle) -> dict:
+        """Block for one engine result; the per-item reply payload."""
+        try:
+            y = np.asarray(handle.result(timeout=self.result_timeout_s))
+        except Exception as err:  # degraded cluster, engine shutdown, ...
+            return {"error": f"{type(err).__name__}: {err}"}
+        return {
             "request_id": handle.request_id,
             "shape": list(y.shape),
             "output": y.tolist(),
             "latency_s": handle.latency_s,
-        })
+        }
 
 
 class ServingFrontend:

@@ -45,6 +45,13 @@ __all__ = ["Request", "RequestHandle", "RequestQueue", "ScheduledBatch",
            "Scheduler", "MultiScheduler"]
 
 
+def _take_batch(x: jnp.ndarray, n: int, axis: int) -> jnp.ndarray:
+    """The first ``n`` entries of ``x`` along ``axis`` (static slice)."""
+    idx = [slice(None)] * x.ndim
+    idx[axis] = slice(0, n)
+    return x[tuple(idx)]
+
+
 @dataclasses.dataclass
 class Request:
     """One in-flight inference request for a single ``(C, H, W)`` image."""
@@ -148,8 +155,11 @@ class RequestQueue:
 @dataclasses.dataclass
 class ScheduledBatch:
     """A bucketed group of requests advancing through the ConvL stack
-    together.  ``x`` is the current activation, ``(bucket, C, H, W)``;
-    rows past ``len(requests)`` are zero padding."""
+    together.  ``x`` is the current activation — ``(bucket, C, H, W)`` on
+    the round-trip path, or (partition-resident serving, mid-stack) the
+    coded input shares ``(n, ell_a, bucket, C, h_hat, Wp)`` with the batch
+    on ``batch_axis``; entries past ``len(requests)`` along that axis are
+    zero padding."""
 
     requests: list[Request]
     x: jnp.ndarray
@@ -157,6 +167,9 @@ class ScheduledBatch:
     layer_idx: int = 0
     model: str = ""
     timings: list = dataclasses.field(default_factory=list)
+    # which axis of ``x`` is the request batch: 0 for raw/merged tensors,
+    # 2 while carrying partition-resident coded shares between layers
+    batch_axis: int = 0
 
     @property
     def real(self) -> int:
@@ -230,8 +243,11 @@ class Scheduler:
         fuller bucket (fewer master/worker rounds).  Fragments arise from
         admission racing arrivals, and — under multi-model fair share —
         from a model's batches waiting at a boundary while another model
-        advances.  Returns the number of merges performed (the engine
-        accounts them into ``MetricsCollector`` — the single counter)."""
+        advances.  Partition-resident batches merge the same way, just on
+        their coded-share batch axis (equal depth implies equal state
+        layout; zero padding encodes to zero shares).  Returns the number
+        of merges performed (the engine accounts them into
+        ``MetricsCollector`` — the single counter)."""
         merges = 0
         with self._lock:
             by_depth: dict[int, list[ScheduledBatch]] = {}
@@ -243,12 +259,20 @@ class Scheduler:
                     a, b = group[0], group[1]
                     if a.real + b.real > self.max_batch:
                         break
+                    ax = a.batch_axis
+                    assert ax == b.batch_axis, (ax, b.batch_axis)
                     x = jnp.concatenate(
-                        [a.x[: a.real], b.x[: b.real]], axis=0
+                        [_take_batch(a.x, a.real, ax),
+                         _take_batch(b.x, b.real, ax)], axis=ax
                     )
-                    x, real = self.pad_to_bucket(x)
+                    # pass axis only off the default: pad_to_bucket may be a
+                    # plain (x) -> (padded, real) callable without an axis
+                    # parameter (only CodedPipeline's method accepts one,
+                    # and only partition-resident batches need it)
+                    x, real = (self.pad_to_bucket(x) if ax == 0
+                               else self.pad_to_bucket(x, axis=ax))
                     a.requests.extend(b.requests)
-                    a.x, a.bucket = x, int(x.shape[0])
+                    a.x, a.bucket = x, int(x.shape[ax])
                     # a's timings describe the merged batch's past; b's are
                     # dropped with b (only per-request metrics survive)
                     self.inflight.remove(b)
@@ -301,33 +325,42 @@ class MultiScheduler:
         free capacity, rotating so no model's queue monopolizes admission;
       * ``coalesce()``— equal-depth merges inside every model;
       * ``next_batch()`` — the fair-share pick: a rotating sweep over the
-        models, granting one layer round to the next model with in-flight
-        work (idle models are skipped without losing their turn's place).
-        A model with work is never more than one full sweep of the other
-        models away from its next round — the bound is positional, NOT a
-        least-served count, so a model that idles while another serves
-        builds up no deficit it could later monopolize the engine with.
-        Within the chosen model the pick stays deepest-first.
+        models, granting up to ``weight`` consecutive layer rounds to the
+        next model with in-flight work (idle models are skipped without
+        losing their turn's place).  A model with work is never more than
+        the sum of the *other* models' weights rounds away from its next
+        round — with unit weights, one full sweep — and the bound is
+        positional, NOT a least-served count, so a model that idles while
+        another serves builds up no deficit it could later monopolize the
+        engine with.  Within the chosen model the pick stays deepest-first.
     """
 
     def __init__(self):
         self.not_empty = threading.Condition(threading.RLock())
         self._ids = itertools.count()
         self.schedulers: dict[str, Scheduler] = {}
+        # integer fair-share weights: a model gets up to ``weight``
+        # consecutive rounds per sweep position
+        self.weights: dict[str, int] = {}
         # accounting only (stats/tests): layer-rounds granted per model
         self.served_rounds: dict[str, int] = {}
         self._admit_rr = 0
         self._pick_rr = 0
+        self._pick_credit = 0  # rounds granted at the current sweep position
 
     def add_model(self, name: str, pad_to_bucket: Callable, *,
-                  max_batch: int, max_inflight: int = 2) -> Scheduler:
+                  max_batch: int, max_inflight: int = 2,
+                  weight: int = 1) -> Scheduler:
         if name in self.schedulers:
             raise ValueError(f"model {name!r} already registered")
+        if not isinstance(weight, int) or weight < 1:
+            raise ValueError(f"weight must be an integer >= 1, got {weight!r}")
         sched = Scheduler(
             pad_to_bucket, max_batch=max_batch, max_inflight=max_inflight,
             name=name, queue=RequestQueue(self.not_empty, self._ids),
         )
         self.schedulers[name] = sched
+        self.weights[name] = weight
         self.served_rounds[name] = 0
         return sched
 
@@ -366,14 +399,23 @@ class MultiScheduler:
         return out
 
     def next_batch(self) -> tuple[str, ScheduledBatch] | None:
-        """Fair-share pick: the rotating sweep (see class docstring), one
-        served round accounted to the winner."""
+        """Fair-share pick: the rotating weighted sweep (see class
+        docstring), one served round accounted to the winner.  A model with
+        ``weight=w`` is granted up to ``w`` consecutive rounds before the
+        sweep position advances; skipping an idle model forfeits any credit
+        it had at its position (positional bound, no banked deficit)."""
         names = list(self.schedulers)
         for off in range(len(names)):
-            name = names[(self._pick_rr + off) % len(names)]
+            pos = (self._pick_rr + off) % len(names)
+            name = names[pos]
             batch = self.schedulers[name].next_batch()
             if batch is not None:
-                self._pick_rr = (self._pick_rr + off + 1) % len(names)
+                if off:  # swept past idle models: restart credit here
+                    self._pick_rr, self._pick_credit = pos, 0
+                self._pick_credit += 1
+                if self._pick_credit >= self.weights[name]:
+                    self._pick_rr = (pos + 1) % len(names)
+                    self._pick_credit = 0
                 self.served_rounds[name] += 1
                 return name, batch
         return None

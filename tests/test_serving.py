@@ -592,6 +592,74 @@ def test_fair_share_interleaves_models():
         assert abs(prefix.count("a") - prefix.count("b")) <= 1, prefix
 
 
+def test_weighted_fair_share_round_ratio_and_starvation_bound():
+    """register_model(..., weight=w): the rotating sweep grants up to w
+    consecutive rounds per sweep position.  With weights (2, 1) and both
+    models backlogged, rounds follow a,a,b,... and the starvation bound
+    holds: a backlogged model never waits more than the sum of the OTHER
+    models' weights between consecutive rounds of its own."""
+    pipe_a, _ = _pipeline(bucket_sizes=(1,))
+    pipe_b, _ = _pipeline_b(bucket_sizes=(1,))
+    server = CodedServer(mode="simulated")
+    server.register_model("a", pipe_a, weight=2)
+    server.register_model("b", pipe_b, weight=1)
+    advanced = []
+    orig = server.cluster.run_pipeline_layer
+
+    def spy(idx, x, model=None):
+        advanced.append(model)
+        return orig(idx, x, model)
+
+    server.cluster.run_pipeline_layer = spy
+    ha = _prequeue(server, "a", _images(4))
+    hb = _prequeue(server, "b", _images_b(4))
+    with server:
+        for h in ha + hb:
+            h.result(timeout=60.0)
+    # 4 requests x 2 layers per model
+    assert advanced.count("a") == 8 and advanced.count("b") == 8
+    # while both are backlogged the prefix ratio honors the weights: in any
+    # prefix of the contended phase, a's rounds stay within weight_a of
+    # 2x b's rounds (a,a,b repeating)
+    contended = advanced[: 3 * 4]  # both models have work for >= 4 sweeps
+    for i in range(1, len(contended) + 1):
+        na, nb = contended[:i].count("a"), contended[:i].count("b")
+        assert abs(na - 2 * nb) <= 2, contended[:i]
+    # starvation bound: gaps between consecutive 'b' rounds <= weight_a + 1
+    b_rounds = [i for i, m in enumerate(contended) if m == "b"]
+    assert all(j - i <= 3 for i, j in zip(b_rounds, b_rounds[1:]))
+
+
+def test_weighted_fair_share_validation():
+    server = CodedServer(mode="simulated")
+    with pytest.raises(ValueError, match="weight"):
+        server.register_model("a", _pipeline()[0], weight=0)
+    with pytest.raises(ValueError, match="weight"):
+        server.register_model("a", _pipeline()[0], weight=1.5)
+    # the failed registrations left no partial state behind
+    assert not server.models and server.cluster is None
+
+
+def test_models_registry_single_source_of_truth():
+    """The name -> pipeline registry lives only in the cluster;
+    CodedServer.models holds per-model serving state whose ``pipeline`` is
+    a live view of ``cluster.pipelines`` — the two can never disagree."""
+    pipe_a, _ = _pipeline()
+    pipe_b, _ = _pipeline_b()
+    server = CodedServer(mode="simulated")
+    server.register_model("a", pipe_a)
+    server.register_model("b", pipe_b, weight=3)
+    assert set(server.models) == set(server.cluster.pipelines) == {"a", "b"}
+    assert server.models["a"].pipeline is server.cluster.pipelines["a"]
+    assert server.models["b"].pipeline is pipe_b
+    # the fair-share weight likewise has one home: the scheduler
+    assert server.scheduler.weights["b"] == 3
+    # a cluster-side replace is immediately visible through the view
+    pipe_a2, _ = _pipeline()
+    server.cluster.load_pipeline(pipe_a2, "a")
+    assert server.models["a"].pipeline is pipe_a2
+
+
 def test_fair_share_idle_model_builds_no_deficit():
     """A model that idled while another served must NOT bank a least-served
     deficit it can later spend monopolizing the engine: the sweep is
@@ -778,6 +846,88 @@ def test_http_frontend_roundtrip_and_drain():
         _http("GET", f"{url}/v1/models", timeout=2.0)
     # idempotent
     frontend.shutdown()
+
+
+def test_http_batched_infer_per_item_errors():
+    """POST /v1/infer with "inputs": one HTTP round trip fans out every
+    image to the engine (in-order results), and a bad item yields a
+    per-item error without failing its siblings."""
+    pipe_a, _ = _pipeline()
+    ref_a, _ = _pipeline()
+    server = CodedServer(pipe_a, mode="simulated", model="a")
+    frontend = ServingFrontend(server, port=0)
+    frontend.start()
+    url = frontend.url
+    try:
+        xs = [np.asarray(x) for x in _images(3)]
+        status, out = _http("POST", f"{url}/v1/infer",
+                            {"model": "a", "inputs": [x.tolist() for x in xs]})
+        assert status == 200 and out["model"] == "a" and out["count"] == 3
+        assert len(out["results"]) == 3
+        for x, item in zip(xs, out["results"]):
+            assert "error" not in item
+            np.testing.assert_allclose(
+                np.asarray(item["output"], np.float32),
+                np.asarray(ref_a.run(x)), rtol=1e-4, atol=1e-4)
+        # in-order: request ids ascend with list position
+        ids = [r["request_id"] for r in out["results"]]
+        assert ids == sorted(ids)
+
+        # middle item has the wrong shape: that item errors, siblings serve
+        bad = [xs[0].tolist(), np.zeros((1, 2, 2)).tolist(), xs[2].tolist()]
+        status, out = _http("POST", f"{url}/v1/infer",
+                            {"model": "a", "inputs": bad})
+        assert status == 200 and out["count"] == 3
+        assert "error" not in out["results"][0]
+        assert "request shape" in out["results"][1]["error"]
+        assert "error" not in out["results"][2]
+
+        # malformed batches are request-level 400s
+        for body in ({"model": "a", "inputs": []},
+                     {"model": "a", "inputs": 5},
+                     {"model": "a", "input": xs[0].tolist(),
+                      "inputs": [xs[0].tolist()]}):
+            with pytest.raises(urllib.error.HTTPError) as err:
+                _http("POST", f"{url}/v1/infer", body)
+            assert err.value.code == 400
+    finally:
+        frontend.shutdown()
+
+
+def test_http_infer_no_model_registered_is_503_not_crash():
+    """An infer against an engine with zero models must answer 503 (both
+    single and batched forms), not kill the handler with an IndexError."""
+    server = CodedServer(mode="simulated")
+    frontend = ServingFrontend(server, port=0, manage_server=False)
+    frontend.start()
+    try:
+        x = np.zeros((2, 12, 12)).tolist()
+        for body in ({"input": x}, {"inputs": [x]}):
+            with pytest.raises(urllib.error.HTTPError) as err:
+                _http("POST", f"{frontend.url}/v1/infer", body)
+            assert err.value.code == 503
+    finally:
+        frontend.shutdown()
+
+
+def test_http_batched_infer_requires_model_when_ambiguous():
+    server = CodedServer(mode="simulated")
+    server.register_model("a", _pipeline()[0])
+    server.register_model("b", _pipeline_b()[0])
+    frontend = ServingFrontend(server, port=0)
+    frontend.start()
+    try:
+        x = np.asarray(_images(1)[0])
+        with pytest.raises(urllib.error.HTTPError) as err:
+            _http("POST", f"{frontend.url}/v1/infer",
+                  {"inputs": [x.tolist()]})
+        assert err.value.code == 400
+        # with the model named, the batch serves
+        status, out = _http("POST", f"{frontend.url}/v1/infer",
+                            {"model": "a", "inputs": [x.tolist()]})
+        assert status == 200 and out["count"] == 1
+    finally:
+        frontend.shutdown()
 
 
 # -- metrics --------------------------------------------------------------
