@@ -71,8 +71,10 @@ def _pipelines(arch: str, n: int, kab, backend: str = "lax"):
     specs = plan_layers(CNN_SPECS[arch][1], input_hw(arch, smoke=True), n,
                         default_kab=kab)
     rt = CodedPipeline(specs, params, backend=backend)
+    # donate_transitions=False: the paired transition timing below re-feeds
+    # the same outs array into the jitted transition, which donation forbids
     fused = CodedPipeline(specs, params, backend=backend,
-                          fuse_transitions=True)
+                          fuse_transitions=True, donate_transitions=False)
     return rt, fused
 
 

@@ -14,7 +14,7 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sizes (slow)")
-    ap.add_argument("--only", default=None, help="comma list: exp1..exp9,roofline")
+    ap.add_argument("--only", default=None, help="comma list: exp1..exp10,roofline")
     ap.add_argument("--batch", type=int, default=4,
                     help="batch size for the coded-pipeline sections (exp1/exp4)")
     args = ap.parse_args()
@@ -31,6 +31,7 @@ def main() -> None:
         exp7_pallas_worker,
         exp8_multimodel,
         exp9_fused_transitions,
+        exp10_kernel_roofline,
         roofline_report,
     )
 
@@ -44,6 +45,7 @@ def main() -> None:
         "exp7": exp7_pallas_worker.run,
         "exp8": exp8_multimodel.run,
         "exp9": exp9_fused_transitions.run,
+        "exp10": exp10_kernel_roofline.run,
         "roofline": roofline_report.run,
     }
     print("name,us_per_call,derived")

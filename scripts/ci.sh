@@ -13,7 +13,12 @@
 # and the partition-resident transition smoke benchmark (exp9, asserts
 # the fused decode->relu->pool->re-encode transition path beats the
 # full-tensor round trip summed over every layer boundary, with fp32
-# parity and the bounded-program contract checked inside).
+# parity and the bounded-program contract checked inside), and the
+# kernel roofline smoke benchmark (exp10, asserts the pipelined +
+# in-kernel-im2col worker kernel beats the pre-pipelining baseline on
+# every cell with bit-identical fp32 outputs, and that no cell's
+# speedup regressed >10% vs the committed BENCH_kernels.json
+# trajectory).
 # Extra args are passed through to the main pytest run.
 #
 # Tests run with a per-test watchdog (tests/conftest.py, REPRO_TEST_TIMEOUT
@@ -39,3 +44,4 @@ python -m benchmarks.exp6_serving --smoke
 python -m benchmarks.exp7_pallas_worker --smoke
 python -m benchmarks.exp8_multimodel --smoke
 python -m benchmarks.exp9_fused_transitions --smoke
+python -m benchmarks.exp10_kernel_roofline --smoke

@@ -157,7 +157,8 @@ class CodedPipeline:
                  backend: str = "lax", fused_worker: bool = True,
                  interpret: bool = True,
                  bucket_sizes: Sequence[int] | None = None,
-                 fuse_transitions: bool = False):
+                 fuse_transitions: bool = False,
+                 donate_transitions: bool | None = None):
         specs = list(specs)
         if not specs:
             raise ValueError("empty pipeline")
@@ -176,6 +177,18 @@ class CodedPipeline:
         # directly — one jitted transition program per (layer, bucket), no
         # merged (B, C, H, W) round trip.  The final layer always merges.
         self.fuse_transitions = fuse_transitions
+        # donate the fastest-delta worker-output buffer into the fused
+        # transition program: between ConvL rounds the decode consumes
+        # ``outs`` exactly once, so XLA can reuse its pages for the coded
+        # next-layer shares instead of holding both live (allocator
+        # pressure scales with delta x block x bucket otherwise).  None =
+        # donate wherever XLA honors donation (CPU does not — it warns and
+        # copies, so the CPU default keeps donation off).  Callers that
+        # re-feed the same ``outs`` array into a transition twice (paired
+        # benchmarks) must pass False.
+        if donate_transitions is None:
+            donate_transitions = jax.default_backend() != "cpu"
+        self.donate_transitions = donate_transitions
         # batch-size buckets: callers pad request batches up to one of these
         # sizes (``pad_to_bucket``) so jit compiles a *bounded* set of batch
         # programs — one per (program, bucket), never one per batch size
@@ -481,8 +494,110 @@ class CodedPipeline:
                     coded = encode_tensor_list(parts, m_next)
                     return group_by_worker(coded, ell_next)
 
-            fn = self._transitions[key] = jax.jit(trans)
+            fn = self._transitions[key] = jax.jit(
+                trans,
+                donate_argnums=(0,) if self.donate_transitions else (),
+            )
         return fn
+
+    # -- kernel autotuning ---------------------------------------------------
+    def autotune_kernels(self, bucket_sizes: Sequence[int] | None = None, *,
+                         repeat: int = 3, force: bool = False,
+                         path: str | None = None) -> dict:
+        """Sweep every Pallas kernel cell this pipeline will launch and
+        persist the winners in the autotune ledger (``repro.kernels
+        .autotune``), then drop the compiled-program caches so rebuilt
+        programs pick the tuned tiles up at their next trace.
+
+        Cells are enumerated in *shape space* (``jax.eval_shape`` walks the
+        encode -> worker -> transition chain without running it), one per
+        (layer geometry, bucket): the worker's implicit-GEMM conv, and —
+        under ``fuse_transitions`` — the transition's decode GEMM plus both
+        re-encode GEMM widths (the fastest-delta subset the single-process
+        path feeds it, and the all-n re-encode the cluster runtime uses).
+        Already-cached cells return instantly (``force`` re-sweeps), so
+        calling this at server startup costs sweeps only on a cold ledger.
+        Returns ``{ledger key: winning params}`` for the cells visited.
+        """
+        if self.backend != "pallas":
+            return {}
+        from repro.kernels import autotune
+
+        buckets = (self.normalize_buckets(bucket_sizes) if bucket_sizes
+                   else (self.bucket_sizes or (1,)))
+        last = len(self.specs) - 1
+        tuned: dict[str, dict] = {}
+        for bucket in buckets:
+            x = jax.ShapeDtypeStruct((bucket,) + self.input_shape,
+                                     self.input_dtype)
+            for idx, (spec, layer) in enumerate(zip(self.specs, self.layers)):
+                ids = self.layer_worker_ids(idx)
+                m_sel = jax.ShapeDtypeStruct(
+                    self.encode_columns(idx, ids).shape, self.input_dtype)
+                xe = jax.eval_shape(layer.encode_inputs, x, m_sel)
+                ke_shape = self.coded_filters[idx].shape[1:]
+                wkey = autotune.worker_key(
+                    xe.shape[1:], ke_shape, spec.geo.stride,
+                    interpret=self.interpret)
+                tuned[wkey] = autotune.tune_worker(
+                    xe.shape[1:], ke_shape, spec.geo.stride,
+                    interpret=self.interpret, dtype=self.input_dtype,
+                    repeat=repeat, force=force, path=path)
+                outs = jax.eval_shape(
+                    jax.vmap(layer.worker_compute),
+                    jax.ShapeDtypeStruct((len(ids),) + xe.shape[1:],
+                                         xe.dtype),
+                    jax.ShapeDtypeStruct((len(ids),) + ke_shape,
+                                         self.coded_filters[idx].dtype),
+                )
+                if self.fuse_transitions and idx < last:
+                    q = outs.shape[0] * outs.shape[1]
+                    f = int(np.prod(outs.shape[2:]))
+                    dkey = autotune.matmul_key(q, q, f, relu=True,
+                                               interpret=self.interpret)
+                    tuned[dkey] = autotune.tune_matmul(
+                        q, q, f, relu=True, interpret=self.interpret,
+                        dtype=self.input_dtype, repeat=repeat, force=force,
+                        path=path)
+                    nxt = self.specs[idx + 1]
+                    geo, pool, geo_next = spec.geo, spec.pool, nxt.geo
+
+                    def probe(outs_, d_):
+                        rows = outs_.reshape(
+                            outs_.shape[0] * outs_.shape[1], -1)
+                        blocks = (d_.astype(rows.dtype) @ rows).reshape(
+                            (q,) + outs_.shape[2:])
+                        return partition_transition(blocks, geo, pool,
+                                                    geo_next, relu=False)
+
+                    parts = jax.eval_shape(
+                        probe, outs,
+                        jax.ShapeDtypeStruct((q, q), outs.dtype))
+                    k2 = parts.shape[0]
+                    fp = int(np.prod(parts.shape[1:]))
+                    ids_next = self.layer_worker_ids(idx + 1)
+                    # both re-encode widths: the fastest-delta' subset and
+                    # the all-n round the cluster runtime re-encodes for
+                    widths = {
+                        self.encode_columns(idx + 1, ids_next).shape[1],
+                        self.encode_columns_all(idx + 1).shape[1],
+                    }
+                    for width in sorted(widths):
+                        ekey = autotune.matmul_key(
+                            width, k2, fp, interpret=self.interpret)
+                        tuned[ekey] = autotune.tune_matmul(
+                            width, k2, fp, interpret=self.interpret,
+                            dtype=self.input_dtype, repeat=repeat,
+                            force=force, path=path)
+                # next layer sees this layer's pooled output
+                x = jax.ShapeDtypeStruct(
+                    (bucket, spec.geo.out_channels, spec.out_hw,
+                     spec.out_hw), self.input_dtype)
+        # rebuilt programs consult the fresh winners at their next trace
+        self._batch_programs.clear()
+        self._cluster_programs.clear()
+        self._transitions.clear()
+        return tuned
 
     # -- execution ---------------------------------------------------------
     def layer_worker_ids(self, idx: int, worker_ids=None) -> tuple[int, ...]:
@@ -610,6 +725,7 @@ def build_cnn_pipeline(
     interpret: bool = True,
     bucket_sizes: Sequence[int] | None = None,
     fuse_transitions: bool = False,
+    donate_transitions: bool | None = None,
 ) -> CodedPipeline:
     """Compile one of the named CNNs (``lenet5``/``alexnet``/``vgg16``) into
     a ``CodedPipeline`` (lazy model import keeps core free of model deps)."""
@@ -627,4 +743,5 @@ def build_cnn_pipeline(
     )
     return CodedPipeline(specs, params, backend=backend, interpret=interpret,
                          bucket_sizes=bucket_sizes,
-                         fuse_transitions=fuse_transitions)
+                         fuse_transitions=fuse_transitions,
+                         donate_transitions=donate_transitions)

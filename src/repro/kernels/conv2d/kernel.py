@@ -1,21 +1,44 @@
 """Convolution as implicit GEMM for the TPU MXU.
 
 Hardware adaptation (DESIGN.md §3): the paper's workers run a black-box CPU
-convolution; on TPU the native form is im2col (done by XLA's
-``conv_general_dilated_patches``, a pure data-movement op) followed by an
-MXU-tiled GEMM (the Pallas matmul kernel).  The GEMM dims are
-``M = H'*W'`` (output pixels), ``K = C*K_H*K_W`` (patch), ``N = out
-channels`` — M and N are 128-padded inside the matmul kernel.
+convolution; on TPU the native form is im2col followed by an MXU-tiled GEMM.
+The GEMM dims are ``M = H'*W'`` (output pixels), ``K = C*K_H*K_W`` (patch),
+``N = out channels``.
+
+Two im2col strategies:
+
+  * **In-kernel im2col** (``fused_im2col=True``, the default) — patch
+    extraction is fused into the GEMM tile load: the grid walks (image
+    share, output-row tile, N tile), each step pulls one padded input share
+    into VMEM via ``BlockSpec`` streaming and gathers its ``C*KH*KW`` patch
+    rows *inside* the kernel (static shifted slices over the share — pure
+    register traffic), so the ``(ea*B, C*KH*KW, H', W')`` patch tensor —
+    the largest intermediate on the worker hot path — never exists in HBM.
+  * **Two-step** (``fused_im2col=False``, the fallback for odd geometries)
+    — XLA's ``conv_general_dilated_patches`` materializes the patch tensor
+    in HBM, then one ``matmul_pallas`` tile sweep consumes it.
+
+Both accumulate fp32 over the same 128-sized K chunks in the same order,
+so their outputs are bit-identical.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.matmul.kernel import matmul_pallas
 
 __all__ = ["conv2d_im2col_pallas", "coded_worker_pallas",
            "coded_transition_pallas"]
+
+# Guard for the in-kernel im2col path: one input share (C*hh*wp) and one
+# patch tile (bo*wo x K) must both fit VMEM comfortably.  Geometries past
+# the guard silently take the two-step path (the documented fallback).
+_FUSED_VMEM_ELEMS = 1 << 21  # 2M fp32 elements = 8 MB of the ~16 MB VMEM
 
 
 def conv2d_im2col_pallas(
@@ -25,6 +48,7 @@ def conv2d_im2col_pallas(
     padding: int = 0,
     *,
     interpret: bool = True,
+    **tile_kw,
 ) -> jnp.ndarray:
     """``x``: (C, H, W); ``k``: (N, C, KH, KW) -> (N, H', W').
 
@@ -36,7 +60,102 @@ def conv2d_im2col_pallas(
     assert c == c2
     if padding:
         x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding)))
-    return coded_worker_pallas(x[None], k[None], stride, interpret=interpret)[0]
+    return coded_worker_pallas(x[None], k[None], stride, interpret=interpret,
+                               **tile_kw)[0]
+
+
+def _worker_im2col_kernel(x_ref, w_ref, o_ref, *, stride: int, kh: int,
+                          kw: int, bo: int, wo: int, ck: int, bk: int):
+    """One (share, output-row tile, N tile) step of the fused worker GEMM.
+
+    ``x_ref``: (1, C, hh, wp) — the whole padded input share, streamed to
+    VMEM by the pallas pipeline.  ``w_ref``: (kp, bn) — one N-tile of the
+    reshaped coded filters, K zero-padded to the chunk grid.  The patch
+    rows for this tile are gathered here, in-kernel, as ``KH*KW`` shifted
+    strided slices of the share — never materialized outside VMEM.
+    """
+    i = pl.program_id(1)
+    x = x_ref[0]  # (C, hh, wp)
+    c, _, wp = x.shape
+    span = (bo - 1) * stride + kh  # input rows feeding bo output rows
+    xwin = jax.lax.dynamic_slice(x, (0, i * bo * stride, 0), (c, span, wp))
+    taps = []
+    for dh in range(kh):
+        for dw in range(kw):
+            taps.append(jax.lax.slice(
+                xwin, (0, dh, dw),
+                (c, dh + (bo - 1) * stride + 1, dw + (wo - 1) * stride + 1),
+                (1, stride, stride),
+            ))  # (C, bo, wo): tap (dh, dw) of every output pixel in the tile
+    # feature order must match kccp-reshaped filters: C slowest, then KH, KW
+    patch = jnp.stack(taps, axis=1).reshape(ck, bo * wo).T  # (bo*wo, ck)
+    kp, bn = w_ref.shape
+    if kp > ck:  # zero-pad K to the chunk grid (exact under fp32 addition)
+        patch = jnp.concatenate(
+            [patch, jnp.zeros((bo * wo, kp - ck), patch.dtype)], axis=1)
+    acc = jnp.zeros((bo * wo, bn), jnp.float32)
+    for kk in range(kp // bk):  # same chunk order as matmul_pallas: bit-compat
+        acc += jnp.dot(
+            patch[:, kk * bk:(kk + 1) * bk],
+            w_ref[kk * bk:(kk + 1) * bk, :],
+            preferred_element_type=jnp.float32,
+        )
+    o_ref[...] = acc.astype(o_ref.dtype).reshape(1, bo, wo, bn)
+
+
+def _fused_worker_gemm(xin, ke, stride, *, interpret, bo, bn, bk):
+    """In-kernel-im2col GEMM: xin (G, C, hh, wp) x ke (eb, nb, C, KH, KW)
+    -> (G, ho, wo, eb*nb)."""
+    g, c, hh, wp = xin.shape
+    eb, nb, _, kh, kw = ke.shape
+    ho = (hh - kh) // stride + 1
+    wo = (wp - kw) // stride + 1
+    assert ho % bo == 0, f"bo={bo} must divide H'={ho}"
+    ck = c * kh * kw
+    n = eb * nb
+    bk_ = min(bk, _ceil128(ck))
+    kp = _pad_to(ck, bk_)
+    bn_ = min(bn, _ceil128(n))
+    np_ = _pad_to(n, bn_)
+    w = ke.reshape(n, ck).T  # (ck, N), K ordered (C, KH, KW) like the patch
+    if (kp, np_) != (ck, n):
+        w = jnp.pad(w, ((0, kp - ck), (0, np_ - n)))
+    out = pl.pallas_call(
+        functools.partial(_worker_im2col_kernel, stride=stride, kh=kh, kw=kw,
+                          bo=bo, wo=wo, ck=ck, bk=bk_),
+        grid=(g, ho // bo, np_ // bn_),
+        in_specs=[
+            pl.BlockSpec((1, c, hh, wp), lambda gi, i, j: (gi, 0, 0, 0)),
+            pl.BlockSpec((kp, bn_), lambda gi, i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bo, wo, bn_), lambda gi, i, j: (gi, i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((g, ho, wo, np_),
+                                       jnp.result_type(xin.dtype, ke.dtype)),
+        interpret=interpret,
+    )(xin, w)
+    return out if np_ == n else out[..., :n]
+
+
+def _fused_feasible(xin_shape, kh: int, kw: int, stride: int, ho: int,
+                    wo: int, bo: int) -> bool:
+    """Geometry admits the in-kernel im2col path (else: two-step fallback)."""
+    _, c, hh, wp = xin_shape
+    if ho < 1 or wo < 1 or bo < 1 or ho % bo != 0:
+        return False
+    share = c * hh * wp
+    patch = bo * wo * _pad_to(c * kh * kw, 128)
+    return share <= _FUSED_VMEM_ELEMS and patch <= _FUSED_VMEM_ELEMS
+
+
+def default_bo(ho: int, wo: int, target: int = 256) -> int:
+    """Largest divisor of ``ho`` whose M tile (bo*wo patch rows) stays near
+    ``target`` rows — full-height tiles for the small shares coded layers
+    produce, split tiles when H' is large."""
+    best = 1
+    for cand in range(1, ho + 1):
+        if ho % cand == 0 and cand * wo <= target:
+            best = cand
+    return best
 
 
 def coded_worker_pallas(
@@ -45,21 +164,33 @@ def coded_worker_pallas(
     stride: int = 1,
     *,
     interpret: bool = True,
+    fused_im2col: bool | None = None,
+    bo: int | None = None,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    num_buffers: int = 2,
 ) -> jnp.ndarray:
     """One worker's entire fused coded subtask as a single MXU tile sweep.
 
     The paper's Algorithm 4 runs ``ell_a * ell_b`` pairwise convolutions per
-    worker; here they collapse into ONE im2col + ONE Pallas GEMM: the
-    ``ell_a`` coded input shares (x the request batch B) ride the GEMM M
-    dimension and the ``ell_b`` coded filter groups concatenate into the N
-    dimension — one kernel launch per worker per layer instead of
-    ``ell_a * ell_b * B`` tiny unbatched GEMMs.
+    worker; here they collapse into ONE implicit-GEMM sweep: the ``ell_a``
+    coded input shares (x the request batch B) ride the GEMM M dimension and
+    the ``ell_b`` coded filter groups concatenate into the N dimension — one
+    kernel launch per worker per layer instead of ``ell_a * ell_b * B`` tiny
+    unbatched GEMMs.
 
     ``xe``: coded input shares ``(ell_a, [B,] C, h_hat, Wp)`` — already
     conv-padded by APCP, so the patch extraction is VALID.
     ``ke``: coded filter groups ``(ell_b, N/k_b, C, KH, KW)``.
     Returns ``(ell_a*ell_b, [B,] N/k_b, H'/k_a, W')``, slot
     ``ell_b * b1 + b2`` (same layout as the unfused loop).
+
+    ``fused_im2col`` selects the im2col strategy (module docstring); None =
+    in-kernel when the geometry admits it.  ``bo`` is the fused path's
+    output-row tile (must divide H'; None = ``default_bo``); ``bm/bn/bk/
+    num_buffers`` tile the GEMM (``bm``/``num_buffers`` drive the two-step
+    path's ``matmul_pallas``; the fused path streams shares at grid level).
     """
     batched = xe.ndim == 5
     ea = xe.shape[0]
@@ -68,19 +199,30 @@ def coded_worker_pallas(
     eb, nb, c2, kh, kw = ke.shape
     assert c == c2, (xe.shape, ke.shape)
     xin = xe.reshape(ea * b, c, hh, wp)
-    patches = jax.lax.conv_general_dilated_patches(
-        xin,
-        filter_shape=(kh, kw),
-        window_strides=(stride, stride),
-        padding=((0, 0), (0, 0)),
-        dimension_numbers=("NCHW", "OIHW", "NCHW"),
-    )  # (ea*B, C*KH*KW, H', W') — pure data movement, feeds the MXU GEMM
-    _, ck, ho, wo = patches.shape
-    # M = ea*B*H'*W' output pixels, K = C*KH*KW patch, N = eb*(N/k_b)
-    lhs = patches.transpose(0, 2, 3, 1).reshape(ea * b * ho * wo, ck)
-    rhs = ke.reshape(eb * nb, ck).T
-    out = matmul_pallas(lhs, rhs, interpret=interpret)  # (M, eb*nb)
-    y = out.reshape(ea, b, ho, wo, eb, nb)
+    ho = (hh - kh) // stride + 1
+    wo = (wp - kw) // stride + 1
+    bo_ = bo if bo is not None else default_bo(ho, wo)
+    if fused_im2col is None:
+        fused_im2col = _fused_feasible(xin.shape, kh, kw, stride, ho, wo, bo_)
+    if fused_im2col:
+        out = _fused_worker_gemm(xin, ke, stride, interpret=interpret,
+                                 bo=bo_, bn=bn, bk=bk)  # (G, ho, wo, eb*nb)
+        y = out.reshape(ea, b, ho, wo, eb, nb)
+    else:
+        patches = jax.lax.conv_general_dilated_patches(
+            xin,
+            filter_shape=(kh, kw),
+            window_strides=(stride, stride),
+            padding=((0, 0), (0, 0)),
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        )  # (ea*B, C*KH*KW, H', W') — materialized in HBM, then GEMM'd
+        _, ck, ho, wo = patches.shape
+        # M = ea*B*H'*W' output pixels, K = C*KH*KW patch, N = eb*(N/k_b)
+        lhs = patches.transpose(0, 2, 3, 1).reshape(ea * b * ho * wo, ck)
+        rhs = ke.reshape(eb * nb, ck).T
+        out = matmul_pallas(lhs, rhs, interpret=interpret, bm=bm, bn=bn,
+                            bk=bk, num_buffers=num_buffers)  # (M, eb*nb)
+        y = out.reshape(ea, b, ho, wo, eb, nb)
     y = jnp.transpose(y, (0, 4, 1, 5, 2, 3)).reshape(ea * eb, b, nb, ho, wo)
     return y if batched else y[:, 0]
 
@@ -92,6 +234,8 @@ def coded_transition_pallas(
     assemble,
     *,
     interpret: bool = True,
+    decode_kw: dict | None = None,
+    encode_kw: dict | None = None,
 ) -> jnp.ndarray:
     """One partition-resident layer transition: decode-GEMM (ReLU fused into
     the tile-sweep epilogue) -> partition-space pool/halo re-slice ->
@@ -114,15 +258,36 @@ def coded_transition_pallas(
     ``d``: the ``(Q, Q)`` decode inverse; ``m_next``: the next layer's
     A-code encode columns ``(k_a', L)``.  Returns the coded next-layer
     input shares ``(L, *part)`` (worker-grouping is the caller's job).
+    ``decode_kw``/``encode_kw`` pass explicit tile/buffer overrides to the
+    two ``matmul_pallas`` sweeps; when omitted, the autotune ledger is
+    consulted per GEMM cell at trace time (lookup only — never a sweep).
     """
+    from repro.kernels import autotune
+
     q = d.shape[0]
     rows = outs.reshape(outs.shape[0] * outs.shape[1], -1)
+    if decode_kw is None:
+        decode_kw = autotune.matmul_params(
+            q, q, rows.shape[1], relu=True, interpret=interpret) or {}
     decoded = matmul_pallas(
-        d.astype(rows.dtype), rows, relu=True, interpret=interpret
+        d.astype(rows.dtype), rows, relu=True, interpret=interpret,
+        **decode_kw
     )
     blocks = decoded.reshape((q,) + outs.shape[2:])
     parts = assemble(blocks)  # (k_a', [B,] C, h_hat', W'+2p')
     k2 = parts.shape[0]
     cols = m_next.astype(parts.dtype)  # (k_a', L)
-    coded = matmul_pallas(cols.T, parts.reshape(k2, -1), interpret=interpret)
+    flat = parts.reshape(k2, -1)
+    if encode_kw is None:
+        encode_kw = autotune.matmul_params(
+            cols.shape[1], k2, flat.shape[1], interpret=interpret) or {}
+    coded = matmul_pallas(cols.T, flat, interpret=interpret, **encode_kw)
     return coded.reshape((cols.shape[1],) + parts.shape[1:])
+
+
+def _ceil128(x: int) -> int:
+    return -(-x // 128) * 128
+
+
+def _pad_to(x: int, b: int) -> int:
+    return -(-x // b) * b

@@ -3,7 +3,15 @@
 ``interpret`` is a real knob here (plumbed from the class APIs down to
 ``pl.pallas_call``): ``True`` emulates the kernel on CPU (this container),
 ``False`` lowers to Mosaic on real TPU hardware.
+
+When the caller passes no explicit tile/strategy kwargs, the autotune
+ledger (``repro.kernels.autotune``) is consulted at trace time — shapes are
+concrete under tracing, the lookup never sweeps, and tile sizes are static
+kernel args, so a tuned program costs the same single jit trace per
+(geometry, bucket) an untuned one does.
 """
+from repro.kernels import autotune
+
 from .kernel import (
     coded_transition_pallas,
     coded_worker_pallas,
@@ -13,17 +21,28 @@ from .kernel import (
 __all__ = ["conv2d_im2col", "coded_worker", "coded_transition"]
 
 
-def conv2d_im2col(x, k, stride=1, padding=0, *, interpret=True):
-    return conv2d_im2col_pallas(x, k, stride, padding, interpret=interpret)
+def conv2d_im2col(x, k, stride=1, padding=0, *, interpret=True, **tile_kw):
+    return conv2d_im2col_pallas(x, k, stride, padding, interpret=interpret,
+                                **tile_kw)
 
 
-def coded_worker(xe, ke, stride=1, *, interpret=True):
-    """Fused batched coded-worker subtask: one im2col + one MXU GEMM."""
-    return coded_worker_pallas(xe, ke, stride, interpret=interpret)
+def coded_worker(xe, ke, stride=1, *, interpret=True, **tile_kw):
+    """Fused batched coded-worker subtask: one implicit-GEMM tile sweep.
+
+    No explicit ``tile_kw`` -> the autotuned winner for this
+    (shares, filters, stride) cell, when one is in the ledger.
+    """
+    if not tile_kw:
+        tile_kw = autotune.worker_params(
+            tuple(xe.shape), tuple(ke.shape), stride, interpret=interpret
+        ) or {}
+    return coded_worker_pallas(xe, ke, stride, interpret=interpret, **tile_kw)
 
 
-def coded_transition(outs, d, m_next, assemble, *, interpret=True):
+def coded_transition(outs, d, m_next, assemble, *, interpret=True, **kw):
     """Fused partition-resident layer transition: decode-GEMM with ReLU
-    epilogue -> partition-space pool/halo re-slice -> encode-GEMM."""
+    epilogue -> partition-space pool/halo re-slice -> encode-GEMM.  The two
+    GEMM sweeps consult the autotune ledger unless ``decode_kw``/
+    ``encode_kw`` are passed."""
     return coded_transition_pallas(outs, d, m_next, assemble,
-                                   interpret=interpret)
+                                   interpret=interpret, **kw)

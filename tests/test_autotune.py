@@ -1,0 +1,122 @@
+"""Autotune ledger: sweep-once caching, persistence, pipeline consultation."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pipeline import build_cnn_pipeline
+from repro.kernels import autotune
+from repro.models.cnn import init_cnn
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.fixture
+def ledger(tmp_path, monkeypatch):
+    """An isolated, initially-empty ledger file for each test."""
+    path = tmp_path / "autotune_cache.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    autotune.clear_cache(memory_only=True)
+    yield path
+    autotune.clear_cache(memory_only=True)
+
+
+def test_matmul_tune_roundtrip(ledger):
+    win = autotune.tune_matmul(16, 16, 512, relu=True, repeat=1)
+    assert win in [dict(c) for c in autotune.MATMUL_CANDIDATES]
+    assert autotune.sweep_count() == 1
+    # second call: cache hit, no re-sweep
+    assert autotune.tune_matmul(16, 16, 512, relu=True, repeat=1) == win
+    assert autotune.sweep_count() == 1
+    # trace-time lookup sees the winner; other cells miss
+    assert autotune.matmul_params(16, 16, 512, relu=True) == win
+    assert autotune.matmul_params(16, 16, 512, relu=False) is None
+    assert autotune.matmul_params(17, 16, 512, relu=True) is None
+
+
+def test_worker_tune_roundtrip(ledger):
+    xe, ke = (2, 1, 2, 12, 16), (2, 3, 2, 3, 3)
+    win = autotune.tune_worker(xe, ke, 1, repeat=1)
+    assert autotune.sweep_count() == 1
+    assert autotune.tune_worker(xe, ke, 1, repeat=1) == win
+    assert autotune.sweep_count() == 1
+    assert autotune.worker_params(xe, ke, 1) == win
+    # the winner runs and matches the untuned default bitwise
+    from repro.kernels.conv2d.kernel import coded_worker_pallas
+
+    x = jnp.asarray(RNG.standard_normal(xe), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal(ke), jnp.float32)
+    assert np.array_equal(
+        np.asarray(coded_worker_pallas(x, k, 1, **win)),
+        np.asarray(coded_worker_pallas(x, k, 1)),
+    )
+
+
+def test_ledger_file_persistence(ledger):
+    win = autotune.tune_matmul(8, 8, 256, repeat=1)
+    assert ledger.exists()
+    on_disk = json.loads(ledger.read_text())
+    key = autotune.matmul_key(8, 8, 256)
+    assert on_disk[key]["params"] == win
+    assert len(on_disk[key]["swept"]) == len(autotune.MATMUL_CANDIDATES)
+    # a fresh process (simulated: drop memory, reload file) sees the winner
+    autotune.clear_cache(memory_only=True)
+    assert autotune.matmul_params(8, 8, 256) == win
+    assert autotune.sweep_count() == 0  # reload is not a sweep
+
+
+def test_lookups_never_sweep(ledger):
+    assert autotune.matmul_params(31, 41, 59) is None
+    assert autotune.worker_params((1, 1, 1, 8, 8), (1, 1, 1, 3, 3), 1) is None
+    assert autotune.sweep_count() == 0
+    assert not ledger.exists()
+
+
+def _small_pipe(**kw):
+    params = init_cnn("lenet5", jax.random.PRNGKey(0))
+    return build_cnn_pipeline("lenet5", params, 8, default_kab=(2, 4),
+                              backend="pallas", **kw), params
+
+
+def test_pipeline_autotune_consulted_and_bounded(ledger):
+    """``autotune_kernels`` sweeps each cell once; the rebuilt tuned
+    programs stay inside the bounded-program contract and match lax."""
+    pipe, params = _small_pipe(fuse_transitions=True, bucket_sizes=(2,))
+    tuned = pipe.autotune_kernels(repeat=1)
+    swept = autotune.sweep_count()
+    assert swept == len(tuned) > 0
+    # idempotent: every cell is a cache hit the second time
+    assert pipe.autotune_kernels(repeat=1) == tuned
+    assert autotune.sweep_count() == swept
+    x = jnp.asarray(RNG.standard_normal((2, 1, 32, 32)), jnp.float32)
+    y = pipe.run(x)
+    ref, _ = _small_pipe()
+    ref = build_cnn_pipeline("lenet5", params, 8, default_kab=(2, 4),
+                             backend="lax").run(x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-3)
+    assert (pipe.worker_program_traces + pipe.transition_program_traces
+            <= pipe.program_trace_bound)
+
+
+def test_pipeline_autotune_noop_on_lax_backend(ledger):
+    pipe, _ = _small_pipe()
+    pipe.backend = "lax"
+    assert pipe.autotune_kernels() == {}
+    assert autotune.sweep_count() == 0
+
+
+def test_donate_transitions_default_and_override():
+    """CPU auto-disables donation (XLA:CPU warns and copies); an explicit
+    flag wins either way and the donating program still computes correctly
+    when fed fresh buffers each call."""
+    pipe, params = _small_pipe(fuse_transitions=True)
+    assert pipe.donate_transitions == (jax.default_backend() != "cpu")
+    don, _ = _small_pipe(fuse_transitions=True, donate_transitions=True)
+    assert don.donate_transitions is True
+    x = jnp.asarray(RNG.standard_normal((1, 1, 32, 32)), jnp.float32)
+    ref = build_cnn_pipeline("lenet5", params, 8, default_kab=(2, 4),
+                             backend="lax").run(x)
+    np.testing.assert_allclose(np.asarray(don.run(x)), np.asarray(ref),
+                               atol=1e-3)
