@@ -1,0 +1,268 @@
+"""Experiment 11 (beyond paper): device pool vs thread pool + perf ledger.
+
+Times the full coded pipeline (``FcdccCluster.run_pipeline``) on the
+paper's CNNs across batch buckets, under the two worker executors:
+
+  * ``threads`` — the per-worker single-thread executors (the pre-PR pool:
+    every coded subtask is a host thread calling into the one shared
+    device queue).
+  * ``device``  — the device-resident pool: each coded worker pinned to
+    its own ``jax.Device``, filters resident per device, pure async
+    dispatch, fastest-delta reaped via per-array readiness.
+
+On a CPU-only box the devices are emulated host devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — set at module
+top when run as a script, *before* jax initializes).  The device pool
+must still win: dispatch is async (no n blocking host threads per round)
+and the per-device queues overlap transfer with compute.
+
+Correctness gates measured alongside the timing (every run, not just
+``--smoke``):
+
+  * **bit-parity** — with a forced fastest-delta subset (finite injected
+    delays on workers ``delta..n-1``) both pools must pick the identical
+    shard subset and produce bit-identical fp32 outputs.
+  * **surviving-shard gather** — the decode consumed only the fastest
+    delta shards: every ``LayerTiming.used_workers`` is a subset of the
+    undelayed workers and the delayed workers' times are NaN (discarded).
+  * **bounded-program contract** — per *device*, worker traces stay
+    ``<= distinct geometries x buckets`` (no per-request or per-round
+    recompilation on any device).
+
+Timing is interleaved and order-rotated (exp10's discipline): each round
+times both pools once in rotating order, so clock drift cancels.
+
+The perf trajectory persists in ``BENCH_devices.json`` at the repo root
+(committed): a plain run appends one dated run with per-cell
+``{threads_us, device_us, speedup}`` plus the aggregate images/s of both
+pools.  ``--smoke`` is the CI gate and is read-only: it asserts (a) the
+device pool's aggregate throughput >= the thread pool's, (b) the
+correctness gates above, and (c) every cell's fresh speedup is no worse
+than 10% below the last committed run for that cell.
+
+  PYTHONPATH=src python -m benchmarks.exp11_device_pool          # append
+  PYTHONPATH=src python -m benchmarks.exp11_device_pool --smoke  # CI gate
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+# Must precede jax's backend init: 8 emulated host devices when run as a
+# script on a CPU box.  When imported by benchmarks.run, jax is already
+# initialized and this is a no-op (run() then skips if single-device).
+if "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8"
+        ).strip()
+
+import jax
+import numpy as np
+
+from repro.core.pipeline import build_cnn_pipeline
+from repro.models.cnn import CNN_SPECS, init_cnn, input_hw
+from repro.runtime import FcdccCluster, StragglerModel
+
+from .common import emit
+from .exp10_kernel_roofline import interleaved
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_devices.json")
+REGRESSION_TOL = 0.9  # fresh speedup must stay >= 0.9x the committed one
+
+
+def load_bench(path: str = BENCH_PATH) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        return {"schema": 1, "runs": []}
+
+
+def committed_speedups(bench: dict) -> dict:
+    """Per-cell device-vs-threads speedup of the most recent committed run
+    that measured the cell."""
+    out = {}
+    for run_ in bench["runs"]:
+        for cell, rec in run_.get("cells", {}).items():
+            out[cell] = rec["speedup"]
+    return out
+
+
+def _pipe(arch: str, n: int, kab):
+    params = init_cnn(arch, jax.random.PRNGKey(0))
+    return build_cnn_pipeline(arch, params, n, default_kab=kab,
+                              input_hw=input_hw(arch, smoke=True))
+
+
+def check_parity(arch: str, pipe, n: int, rng) -> None:
+    """Forced-subset bit-parity + surviving-shard gather, threads vs device.
+
+    Workers ``dm..n-1`` get a finite 0.25s delay, so both pools must keep
+    exactly the undelayed subset for every layer — making their decodes
+    (and therefore the full pipeline outputs) bit-identical fp32.
+    """
+    dm = max(spec.plan.delta for spec in pipe.specs)
+    delays = np.zeros(n)
+    delays[dm:] = 0.25
+    straggler = StragglerModel(delays)
+    x = np.asarray(rng.standard_normal(
+        (1, pipe.specs[0].geo.in_channels) + (input_hw(arch, smoke=True),) * 2
+    ), np.float32)
+    outs, timings = {}, {}
+    for pool in ("threads", "device"):
+        cluster = FcdccCluster(pipe.specs[0].plan, straggler=straggler,
+                               mode="threads", backend="lax", pool=pool)
+        try:
+            cluster.load_pipeline(pipe, arch)
+            y, ts = cluster.run_pipeline(x, model=arch)
+            outs[pool] = np.asarray(y)
+            timings[pool] = ts
+        finally:
+            cluster.shutdown()
+    if not np.array_equal(outs["threads"], outs["device"]):
+        raise SystemExit(
+            f"{arch}: forced-subset outputs differ bitwise between the "
+            f"thread and device pools")
+    delayed = set(range(dm, n))
+    for pool, ts in timings.items():
+        for t in ts:
+            # a delayed worker may legitimately finish (and be measured)
+            # after the subset was sealed; what it must never be is *used*
+            if set(t.used_workers) & delayed:
+                raise SystemExit(
+                    f"{arch}/{t.name} [{pool}]: decode consumed a delayed "
+                    f"shard: used={t.used_workers}")
+
+
+def time_arch(arch: str, n: int, kab, buckets, rng, repeat: int = 3):
+    """Per-bucket seconds for both pools + the device bounded-trace bound."""
+    pipe = {"threads": _pipe(arch, n, kab), "device": _pipe(arch, n, kab)}
+    clusters = {
+        pool: FcdccCluster(pipe[pool].specs[0].plan, straggler=None,
+                           mode="threads", backend="lax", pool=pool)
+        for pool in ("threads", "device")
+    }
+    cells = {}
+    try:
+        for pool, cluster in clusters.items():
+            cluster.load_pipeline(pipe[pool], arch)
+        c0 = pipe["threads"].specs[0].geo.in_channels
+        hw0 = input_hw(arch, smoke=True)
+        for batch in buckets:
+            x = np.asarray(rng.standard_normal((batch, c0, hw0, hw0)),
+                           np.float32)
+            fns = {
+                pool: (lambda cl=clusters[pool]:
+                       cl.run_pipeline(x, model=arch)[0])
+                for pool in ("threads", "device")
+            }
+            cells[batch] = interleaved(fns, repeat=repeat)
+        # bounded-program contract: per device, worker traces stay within
+        # distinct geometries x buckets (compile once per cell, never per
+        # round).  The thread pool's equivalent is asserted by the tier-1
+        # suite; here the *per-device* caches are the new surface.
+        # distinct layer geometries: layers sharing a program_key still
+        # trace once per shape signature, i.e. once per ConvL per bucket
+        geos = len(pipe["device"].specs)
+        bound = geos * len(buckets)
+        traces = clusters["device"]._pool_impl().program_traces()
+        over = {str(d): c for d, c in traces.items() if c > bound}
+        if over:
+            raise SystemExit(
+                f"{arch}: per-device trace count exceeded "
+                f"geometries({geos}) x buckets({len(buckets)}) = {bound}: "
+                f"{over}")
+    finally:
+        for cluster in clusters.values():
+            cluster.shutdown()
+    return cells
+
+
+def run(quick: bool = True, smoke: bool = False, update: bool = True,
+        repeat: int = 3):
+    ndev = len(jax.devices())
+    if ndev < 2:
+        msg = ("exp11 needs a multi-device host; set XLA_FLAGS="
+               "--xla_force_host_platform_device_count=8 (or run as "
+               "`python -m benchmarks.exp11_device_pool`, which sets it)")
+        if smoke:
+            raise SystemExit(msg)
+        print(f"# exp11 skipped: {msg}", flush=True)
+        return {}
+    archs = ("lenet5", "alexnet") if quick else ("lenet5", "alexnet", "vgg16")
+    buckets = (1, 4) if quick else (1, 4, 8)
+    n, kab = 8, (2, 4)
+    rng = np.random.default_rng(0)
+    prior = committed_speedups(load_bench())
+    cells, regressions = {}, []
+    agg = {"threads": 0.0, "device": 0.0}  # images/s, summed over cells
+    for arch in archs:
+        check_parity(arch, _pipe(arch, n, kab), n, rng)
+        for batch, ts in time_arch(arch, n, kab, buckets, rng,
+                                   repeat=repeat).items():
+            cell = f"{arch}/b{batch}"
+            speedup = ts["threads"] / ts["device"]
+            cells[cell] = {
+                "threads_us": round(ts["threads"] * 1e6, 1),
+                "device_us": round(ts["device"] * 1e6, 1),
+                "speedup": round(speedup, 3),
+            }
+            for pool in ("threads", "device"):
+                agg[pool] += batch / ts[pool]
+                emit(f"exp11/{cell}/{pool}", ts[pool],
+                     f"device_vs_threads={speedup:.2f}x")
+            committed = prior.get(cell)
+            if committed and speedup < REGRESSION_TOL * committed:
+                regressions.append((cell, round(speedup, 3), committed))
+    emit("exp11/aggregate", 0.0,
+         f"threads={agg['threads']:.1f}img/s device={agg['device']:.1f}img/s")
+    if smoke:
+        if agg["device"] < agg["threads"]:
+            raise SystemExit(
+                f"device pool did not beat the thread pool in aggregate "
+                f"throughput: device={agg['device']:.1f} img/s < "
+                f"threads={agg['threads']:.1f} img/s")
+        if regressions:
+            raise SystemExit(
+                "device-pool perf regressed >10% vs the committed BENCH "
+                f"trajectory (cell, now, committed): {regressions}")
+        return cells
+    if update:
+        bench = load_bench()
+        bench["runs"].append({
+            "date": time.strftime("%Y-%m-%d"),
+            "backend": jax.default_backend(),
+            "devices": ndev,
+            "quick": quick,
+            "cells": cells,
+            "aggregate_img_per_s": {k: round(v, 1) for k, v in agg.items()},
+        })
+        tmp = f"{BENCH_PATH}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(bench, f, indent=1, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, BENCH_PATH)
+    return cells
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="all three CNNs + bucket 8")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: device >= threads aggregate throughput, "
+                         "forced-subset bit-parity, surviving-shard gather, "
+                         "bounded per-device traces, and no >10%% regression "
+                         "vs BENCH_devices.json (read-only)")
+    ap.add_argument("--no-update", action="store_true",
+                    help="measure + print only; don't append to the ledger")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=not args.full, smoke=args.smoke, update=not args.no_update)

@@ -18,7 +18,14 @@
 # in-kernel-im2col worker kernel beats the pre-pipelining baseline on
 # every cell with bit-identical fp32 outputs, and that no cell's
 # speedup regressed >10% vs the committed BENCH_kernels.json
-# trajectory).
+# trajectory).  Finally, under 8 emulated host devices
+# (XLA_FLAGS=--xla_force_host_platform_device_count=8): the device-pool
+# parity tests (threads-vs-device bit-parity, fastest-delta discard,
+# dead-device elastic re-plan, per-device bounded programs — skipped in
+# the single-device main run above) and the device-pool smoke benchmark
+# (exp11, asserts the device pool's aggregate throughput >= the thread
+# pool's with forced-subset bit-parity and no >10% regression vs the
+# committed BENCH_devices.json trajectory).
 # Extra args are passed through to the main pytest run.
 #
 # Tests run with a per-test watchdog (tests/conftest.py, REPRO_TEST_TIMEOUT
@@ -45,3 +52,7 @@ python -m benchmarks.exp7_pallas_worker --smoke
 python -m benchmarks.exp8_multimodel --smoke
 python -m benchmarks.exp9_fused_transitions --smoke
 python -m benchmarks.exp10_kernel_roofline --smoke
+# device pool: multi-device parity tests + throughput/regression gate
+export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+python -m pytest -x -q tests/test_device_pool.py
+python -m benchmarks.exp11_device_pool --smoke

@@ -158,7 +158,8 @@ class CodedPipeline:
                  interpret: bool = True,
                  bucket_sizes: Sequence[int] | None = None,
                  fuse_transitions: bool = False,
-                 donate_transitions: bool | None = None):
+                 donate_transitions: bool | None = None,
+                 pool: str | None = None, devices=None):
         specs = list(specs)
         if not specs:
             raise ValueError("empty pipeline")
@@ -171,6 +172,11 @@ class CodedPipeline:
         # pallas-only: interpret=True emulates the worker kernels on CPU,
         # False lowers them to Mosaic for real TPU hardware
         self.interpret = interpret
+        # worker-pool preference carried to whichever FcdccCluster /
+        # CodedServer adopts this pipeline (None = auto-select there);
+        # the pipeline's own math never consults it
+        self.pool = pool
+        self.devices = devices
         # partition-resident transitions: between ConvLs the activation is
         # decoded only to the (k_a, k_b) partition grid, relu+pool run per
         # spatial partition with halo exchange, and the partitions re-encode
@@ -726,6 +732,8 @@ def build_cnn_pipeline(
     bucket_sizes: Sequence[int] | None = None,
     fuse_transitions: bool = False,
     donate_transitions: bool | None = None,
+    pool: str | None = None,
+    devices=None,
 ) -> CodedPipeline:
     """Compile one of the named CNNs (``lenet5``/``alexnet``/``vgg16``) into
     a ``CodedPipeline`` (lazy model import keeps core free of model deps)."""
@@ -744,4 +752,5 @@ def build_cnn_pipeline(
     return CodedPipeline(specs, params, backend=backend, interpret=interpret,
                          bucket_sizes=bucket_sizes,
                          fuse_transitions=fuse_transitions,
-                         donate_transitions=donate_transitions)
+                         donate_transitions=donate_transitions,
+                         pool=pool, devices=devices)

@@ -14,12 +14,17 @@ Two im2col strategies:
     rows *inside* the kernel (static shifted slices over the share — pure
     register traffic), so the ``(ea*B, C*KH*KW, H', W')`` patch tensor —
     the largest intermediate on the worker hot path — never exists in HBM.
+    When the whole share is too big for VMEM (uncoded full-frame convs),
+    the **K-streamed** variant keeps the share in HBM and double-buffers
+    per-K-chunk channel windows in via async copies instead
+    (``stream_k``); it accumulates the same fp32 chunks in the same order,
+    so it is bit-identical to the resident variant.
   * **Two-step** (``fused_im2col=False``, the fallback for odd geometries)
     — XLA's ``conv_general_dilated_patches`` materializes the patch tensor
     in HBM, then one ``matmul_pallas`` tile sweep consumes it.
 
-Both accumulate fp32 over the same 128-sized K chunks in the same order,
-so their outputs are bit-identical.
+All paths accumulate fp32 over the same 128-sized K chunks in the same
+order, so their outputs are bit-identical.
 """
 from __future__ import annotations
 
@@ -103,9 +108,90 @@ def _worker_im2col_kernel(x_ref, w_ref, o_ref, *, stride: int, kh: int,
     o_ref[...] = acc.astype(o_ref.dtype).reshape(1, bo, wo, bn)
 
 
-def _fused_worker_gemm(xin, ke, stride, *, interpret, bo, bn, bk):
+def _k_windows(ck: int, bk: int, kh: int, kw: int, kp: int):
+    """Per-K-chunk channel windows ``(c_lo, cw)`` for the streamed path.
+
+    Chunk ``kk`` covers patch columns ``[kk*bk, (kk+1)*bk)``; with the
+    (C, KH, KW) feature order those columns touch only channels
+    ``kk*bk // (kh*kw)`` .. ``(last real column) // (kh*kw)`` — the slice
+    of the share the chunk's DMA must bring in.  ``kp = _pad_to(ck, bk)``
+    guarantees every chunk holds at least one real column."""
+    wins = []
+    for kk in range(kp // bk):
+        k0 = kk * bk
+        k1 = min(ck, k0 + bk) - 1  # last real (non-padding) column
+        c_lo = k0 // (kh * kw)
+        c_hi = k1 // (kh * kw)
+        wins.append((c_lo, c_hi - c_lo + 1))
+    return wins
+
+
+def _worker_im2col_stream_kernel(x_hbm, w_ref, o_ref, buf, sem, *,
+                                 stride: int, kh: int, kw: int, bo: int,
+                                 wo: int, ck: int, bk: int, windows):
+    """K-streamed variant of ``_worker_im2col_kernel``: the share stays in
+    HBM (``x_hbm``: (G, C, hh, wp), ``memory_space=ANY``) and each K chunk
+    double-buffers only its channel window ``(cw, span, wp)`` into VMEM via
+    async copies — the resident path's whole-share ``(1, C, hh, wp)`` VMEM
+    block never exists.  The per-chunk patch gather and the fp32
+    accumulation order are identical to the resident kernel, so the two
+    variants are bit-identical."""
+    gi = pl.program_id(0)
+    i = pl.program_id(1)
+    span = (bo - 1) * stride + kh
+    r0 = i * bo * stride
+    kp, bn = w_ref.shape
+    n_chunks = kp // bk
+
+    def copy_in(kk):  # chunk kk's channel window -> VMEM slot kk % 2
+        c_lo, cw = windows[kk]
+        return pltpu.make_async_copy(
+            x_hbm.at[gi, pl.ds(c_lo, cw), pl.ds(r0, span), :],
+            buf.at[kk % 2, pl.ds(0, cw)],
+            sem.at[kk % 2],
+        )
+
+    copy_in(0).start()
+    if n_chunks > 1:
+        copy_in(1).start()
+    acc = jnp.zeros((bo * wo, bn), jnp.float32)
+    for kk in range(n_chunks):  # static unroll: windows/offsets are static
+        c_lo, cw = windows[kk]
+        copy_in(kk).wait()
+        xw = jax.lax.slice(buf[kk % 2], (0, 0, 0), (cw, span, buf.shape[-1]))
+        taps = []
+        for dh in range(kh):
+            for dw in range(kw):
+                taps.append(jax.lax.slice(
+                    xw, (0, dh, dw),
+                    (cw, dh + (bo - 1) * stride + 1,
+                     dw + (wo - 1) * stride + 1),
+                    (1, stride, stride),
+                ))
+        # window rows are a contiguous block of the full (C, KH, KW) feature
+        # order starting at c_lo*kh*kw — slice the chunk's bk columns out
+        win = jnp.stack(taps, axis=1).reshape(cw * kh * kw, bo * wo).T
+        off = kk * bk - c_lo * kh * kw
+        real = min(ck, (kk + 1) * bk) - kk * bk
+        chunk = jax.lax.slice(win, (0, off), (bo * wo, off + real))
+        if real < bk:  # zero-pad like the resident path (exact in fp32)
+            chunk = jnp.concatenate(
+                [chunk, jnp.zeros((bo * wo, bk - real), chunk.dtype)], axis=1)
+        acc += jnp.dot(
+            chunk,
+            w_ref[kk * bk:(kk + 1) * bk, :],
+            preferred_element_type=jnp.float32,
+        )
+        if kk + 2 < n_chunks:  # prefetch into the slot just consumed
+            copy_in(kk + 2).start()
+    o_ref[...] = acc.astype(o_ref.dtype).reshape(1, bo, wo, bn)
+
+
+def _fused_worker_gemm(xin, ke, stride, *, interpret, bo, bn, bk,
+                       stream=False):
     """In-kernel-im2col GEMM: xin (G, C, hh, wp) x ke (eb, nb, C, KH, KW)
-    -> (G, ho, wo, eb*nb)."""
+    -> (G, ho, wo, eb*nb).  ``stream=True`` keeps the share in HBM and
+    double-buffers per-K-chunk channel windows (bit-identical output)."""
     g, c, hh, wp = xin.shape
     eb, nb, _, kh, kw = ke.shape
     ho = (hh - kh) // stride + 1
@@ -120,6 +206,31 @@ def _fused_worker_gemm(xin, ke, stride, *, interpret, bo, bn, bk):
     w = ke.reshape(n, ck).T  # (ck, N), K ordered (C, KH, KW) like the patch
     if (kp, np_) != (ck, n):
         w = jnp.pad(w, ((0, kp - ck), (0, np_ - n)))
+    if stream:
+        windows = tuple(_k_windows(ck, bk_, kh, kw, kp))
+        cw_max = max(cw for _, cw in windows)
+        span = (bo - 1) * stride + kh
+        out = pl.pallas_call(
+            functools.partial(_worker_im2col_stream_kernel, stride=stride,
+                              kh=kh, kw=kw, bo=bo, wo=wo, ck=ck, bk=bk_,
+                              windows=windows),
+            grid=(g, ho // bo, np_ // bn_),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec((kp, bn_), lambda gi, i, j: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((1, bo, wo, bn_),
+                                   lambda gi, i, j: (gi, i, 0, j)),
+            out_shape=jax.ShapeDtypeStruct((g, ho, wo, np_),
+                                           jnp.result_type(xin.dtype,
+                                                           ke.dtype)),
+            scratch_shapes=[
+                pltpu.VMEM((2, cw_max, span, wp), xin.dtype),
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+            interpret=interpret,
+        )(xin, w)
+        return out if np_ == n else out[..., :n]
     out = pl.pallas_call(
         functools.partial(_worker_im2col_kernel, stride=stride, kh=kh, kw=kw,
                           bo=bo, wo=wo, ck=ck, bk=bk_),
@@ -147,6 +258,25 @@ def _fused_feasible(xin_shape, kh: int, kw: int, stride: int, ho: int,
     return share <= _FUSED_VMEM_ELEMS and patch <= _FUSED_VMEM_ELEMS
 
 
+def _stream_feasible(xin_shape, kh: int, kw: int, stride: int, ho: int,
+                     wo: int, bo: int, bk: int) -> bool:
+    """Geometry admits the K-streamed in-kernel im2col path: the double
+    buffer (2 channel windows), the per-chunk patch window, and the whole
+    w N-tile must fit VMEM — but the whole share need not."""
+    _, c, hh, wp = xin_shape
+    if ho < 1 or wo < 1 or bo < 1 or ho % bo != 0:
+        return False
+    ck = c * kh * kw
+    bk_ = min(bk, _ceil128(ck))
+    kp = _pad_to(ck, bk_)
+    cw_max = max(cw for _, cw in _k_windows(ck, bk_, kh, kw, kp))
+    span = (bo - 1) * stride + kh
+    buf = 2 * cw_max * span * wp
+    win = bo * wo * cw_max * kh * kw
+    return (buf <= _FUSED_VMEM_ELEMS and win <= _FUSED_VMEM_ELEMS
+            and kp * 128 <= _FUSED_VMEM_ELEMS)
+
+
 def default_bo(ho: int, wo: int, target: int = 256) -> int:
     """Largest divisor of ``ho`` whose M tile (bo*wo patch rows) stays near
     ``target`` rows — full-height tiles for the small shares coded layers
@@ -165,6 +295,7 @@ def coded_worker_pallas(
     *,
     interpret: bool = True,
     fused_im2col: bool | None = None,
+    stream_k: bool | None = None,
     bo: int | None = None,
     bm: int = 128,
     bn: int = 128,
@@ -187,10 +318,16 @@ def coded_worker_pallas(
     ``ell_b * b1 + b2`` (same layout as the unfused loop).
 
     ``fused_im2col`` selects the im2col strategy (module docstring); None =
-    in-kernel when the geometry admits it.  ``bo`` is the fused path's
-    output-row tile (must divide H'; None = ``default_bo``); ``bm/bn/bk/
-    num_buffers`` tile the GEMM (``bm``/``num_buffers`` drive the two-step
-    path's ``matmul_pallas``; the fused path streams shares at grid level).
+    in-kernel when the geometry admits it.  ``stream_k`` picks the fused
+    path's share residency: True forces the K-streamed variant (share in
+    HBM, per-chunk channel windows double-buffered to VMEM), False forces
+    whole-share-resident, None auto-falls-back to streaming when the share
+    is too big for the resident path — so uncoded full-frame convs still
+    take the fused path.  Both variants are bit-identical.  ``bo`` is the
+    fused path's output-row tile (must divide H'; None = ``default_bo``);
+    ``bm/bn/bk/num_buffers`` tile the GEMM (``bm``/``num_buffers`` drive
+    the two-step path's ``matmul_pallas``; the fused path streams shares
+    at grid level).
     """
     batched = xe.ndim == 5
     ea = xe.shape[0]
@@ -202,11 +339,21 @@ def coded_worker_pallas(
     ho = (hh - kh) // stride + 1
     wo = (wp - kw) // stride + 1
     bo_ = bo if bo is not None else default_bo(ho, wo)
+    stream = bool(stream_k)
     if fused_im2col is None:
-        fused_im2col = _fused_feasible(xin.shape, kh, kw, stride, ho, wo, bo_)
+        if stream_k is True:
+            fused_im2col = True
+        elif _fused_feasible(xin.shape, kh, kw, stride, ho, wo, bo_):
+            fused_im2col = True
+        elif stream_k is None and _stream_feasible(xin.shape, kh, kw, stride,
+                                                   ho, wo, bo_, bk):
+            fused_im2col = stream = True
+        else:
+            fused_im2col = False
     if fused_im2col:
         out = _fused_worker_gemm(xin, ke, stride, interpret=interpret,
-                                 bo=bo_, bn=bn, bk=bk)  # (G, ho, wo, eb*nb)
+                                 bo=bo_, bn=bn, bk=bk,
+                                 stream=stream)  # (G, ho, wo, eb*nb)
         y = out.reshape(ea, b, ho, wo, eb, nb)
     else:
         patches = jax.lax.conv_general_dilated_patches(

@@ -31,6 +31,27 @@ def make_host_mesh():
     )
 
 
+def make_worker_mesh(n: int, devices=None):
+    """1-D ``("workers",)`` mesh for the coded cluster's device pool.
+
+    Uses ``devices`` when given, else every addressable device — capped at
+    ``n`` (a 6-worker cluster on an 8-device host leaves 2 devices free for
+    the master / other tenants).  Fewer devices than workers is fine: the
+    pool round-robins workers over the mesh (``sharding.worker_devices``),
+    down to the 1-device degenerate case CI's default host exposes.  On a
+    ``--xla_force_host_platform_device_count=8`` host (or a real TPU/GPU
+    slice) each worker gets its own compute queue.
+    """
+    if n < 1:
+        raise ValueError(f"need n >= 1 workers, got {n}")
+    devs = list(devices) if devices is not None else list(jax.devices())
+    devs = devs[:n]
+    return compat.make_mesh(
+        (len(devs),), ("workers",),
+        axis_types=(jax.sharding.AxisType.Auto,), devices=devs,
+    )
+
+
 # TPU v5e-ish hardware constants for the roofline (per chip)
 PEAK_FLOPS_BF16 = 197e12  # FLOP/s
 HBM_BW = 819e9  # B/s

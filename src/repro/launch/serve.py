@@ -92,12 +92,17 @@ def _check_cnn_archs(archs) -> None:
 def build_cnn_server(archs, *, workers: int, stragglers: int,
                      straggler_delay: float, smoke: bool, kab=(2, 4),
                      mode: str = "threads", seed: int = 0,
-                     fuse_transitions: bool = False):
+                     fuse_transitions: bool = False,
+                     pool: str | None = None):
     """One multi-model ``CodedServer``: every arch's pipeline resident on
     the same n-worker pool (its own scheduler/buckets per model).
     ``fuse_transitions`` serves on the partition-resident path (batches
     advance between ConvLs as coded partition shares, no full-activation
-    round trip)."""
+    round trip).  ``pool`` selects the worker executor: ``"device"`` pins
+    each coded worker to its own ``jax.Device`` (real accelerators, or CPU
+    host devices under ``XLA_FLAGS=--xla_force_host_platform_device_
+    count=N``), ``"threads"`` keeps the per-worker thread executors, and
+    None auto-selects the device pool on multi-device hosts."""
     from repro.core.pipeline import build_cnn_pipeline
     from repro.models.cnn import init_cnn, input_hw
     from repro.runtime import StragglerModel
@@ -107,7 +112,7 @@ def build_cnn_server(archs, *, workers: int, stragglers: int,
     straggler = StragglerModel.fixed(workers, stragglers, straggler_delay,
                                      seed=seed)
     server = CodedServer(straggler=straggler, mode=mode,
-                         bucket_sizes=(1, 2, 4, 8))
+                         bucket_sizes=(1, 2, 4, 8), pool=pool)
     for arch in archs:
         params = init_cnn(arch, jax.random.PRNGKey(0))
         server.register_model(arch, build_cnn_pipeline(
@@ -122,7 +127,8 @@ def serve_cnn(archs, *, requests: int, workers: int, stragglers: int,
               straggler_delay: float, smoke: bool, kab=(2, 4),
               mode: str = "threads", seed: int = 0,
               http_port: int | None = None,
-              fuse_transitions: bool = False):
+              fuse_transitions: bool = False,
+              pool: str | None = None):
     """Serve one or several CNN archs from one shared coded worker pool.
 
     Without ``--http-port``: fire ``requests`` concurrent single-image
@@ -138,7 +144,7 @@ def serve_cnn(archs, *, requests: int, workers: int, stragglers: int,
     server = build_cnn_server(
         archs, workers=workers, stragglers=stragglers,
         straggler_delay=straggler_delay, smoke=smoke, kab=kab, mode=mode,
-        seed=seed, fuse_transitions=fuse_transitions,
+        seed=seed, fuse_transitions=fuse_transitions, pool=pool,
     )
     server.warmup()
 
@@ -218,6 +224,13 @@ def main():
     ap.add_argument("--mode", default="threads",
                     choices=("threads", "simulated"),
                     help="threads = wall-clock straggler sleeps (CNN only)")
+    ap.add_argument("--pool", default="auto",
+                    choices=("auto", "threads", "device"),
+                    help="worker executor: device = one jax.Device per "
+                         "coded worker (set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8 for CPU "
+                         "host devices); auto picks device on multi-device "
+                         "hosts (CNN only)")
     ap.add_argument("--http-port", type=int, default=None,
                     help="serve the JSON front-end on this port (CNN only; "
                          "0 = ephemeral)")
@@ -232,7 +245,8 @@ def main():
                   stragglers=args.stragglers,
                   straggler_delay=args.straggler_delay, smoke=args.smoke,
                   mode=args.mode, http_port=args.http_port,
-                  fuse_transitions=args.fuse_transitions)
+                  fuse_transitions=args.fuse_transitions,
+                  pool=None if args.pool == "auto" else args.pool)
         return
     if len(archs) > 1 or args.http_port is not None or args.fuse_transitions:
         raise SystemExit(

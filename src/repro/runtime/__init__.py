@@ -6,3 +6,9 @@ from .cluster import (
     StragglerModel,
     run_layer_elastic,
 )
+from .devicepool import (
+    DeviceWorkerPool,
+    ThreadWorkerPool,
+    make_pool,
+    resolve_pool,
+)

@@ -1,0 +1,413 @@
+"""Worker pools behind ``FcdccCluster``'s submit/collect seam.
+
+Two interchangeable executors for the n coded subtasks of one FCDCC
+master/worker round:
+
+  * ``ThreadWorkerPool`` (``pool="threads"``) — the original simulated
+    cluster: one persistent single-thread executor per worker, every
+    subtask computed on the *default* JAX device, stragglers injected as
+    ``sleep()``s after the compute.  Deterministic, runs anywhere, and the
+    only choice for ``mode="simulated"`` — but the n subtasks serialize on
+    one device queue, so the paper's parallel decomposition never actually
+    runs in parallel.
+  * ``DeviceWorkerPool`` (``pool="device"``) — each worker pinned to a
+    ``jax.Device`` from a 1-D worker mesh (``launch.mesh.make_worker_mesh``
+    / ``sharding.worker_devices``): real TPU/GPU devices, or CPU host
+    devices via ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` so
+    CI exercises it.  Coded filters are ``device_put`` once per worker and
+    stay resident; the worker program is jitted *per device* (its own
+    bounded trace cache, so the bounded-program contract is per-device);
+    ``submit`` is pure async dispatch — all n subtasks enqueue on their own
+    device queues with no per-call thread hop — and ``collect`` reaps the
+    fastest delta via per-array readiness (``jax.Array.is_ready``),
+    discarding late arrivals exactly like the thread pool.  Injected
+    straggler delays are honored as *delayed dispatch* (a timer defers the
+    enqueue by ``delays[i]`` — a simulated network/queueing delay ahead of
+    the subtask), so the deterministic straggler tests and experiments run
+    unchanged on the device pool; with zero delays the variance you measure
+    is the real per-device one.
+
+Both pools share the ``PendingBatch`` in-flight handle and the
+inf = dead / nan = discarded / finite = measured ``worker_times``
+convention, so ``LayerTiming`` semantics are pool-independent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
+
+import jax
+import numpy as np
+
+__all__ = [
+    "ClusterDegraded", "DeviceWorkerPool", "PendingBatch", "StragglerModel",
+    "ThreadWorkerPool", "make_pool", "resolve_pool",
+]
+
+
+class ClusterDegraded(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class StragglerModel:
+    """Per-worker latency injection (seconds added to compute time)."""
+
+    delays: np.ndarray  # (n,) extra seconds; np.inf = dead worker
+
+    @staticmethod
+    def none(n: int) -> "StragglerModel":
+        return StragglerModel(np.zeros(n))
+
+    @staticmethod
+    def fixed(n: int, stragglers: int, delay: float, seed: int = 0) -> "StragglerModel":
+        rng = np.random.default_rng(seed)
+        d = np.zeros(n)
+        idx = rng.choice(n, size=stragglers, replace=False)
+        d[idx] = delay
+        return StragglerModel(d)
+
+    @staticmethod
+    def random_uniform(n: int, p: float, delay: float, seed: int = 0) -> "StragglerModel":
+        rng = np.random.default_rng(seed)
+        return StragglerModel(np.where(rng.random(n) < p, delay, 0.0))
+
+
+@dataclasses.dataclass
+class PendingBatch:
+    """In-flight coded dispatch: n submitted subtasks awaiting ``collect``.
+
+    ``futures`` holds the per-worker futures (threads mode); ``results``
+    holds the precomputed outputs (simulated mode) or the asynchronously
+    dispatched device arrays (device pool — filled in under ``lock`` as
+    timer-deferred stragglers dispatch).  ``worker_times`` is live — workers
+    write into it as they finish — so ``collect`` snapshots it before
+    returning.  ``expected`` (device pool) is the set of live workers whose
+    result will eventually appear."""
+
+    futures: dict
+    results: dict
+    worker_times: list
+    t_start: float
+    expected: set | None = None
+    lock: threading.Lock | None = None
+
+
+def resolve_pool(pool: str | None, mode: str, devices=None) -> str:
+    """The pool-selection rule shared by every entry point.
+
+    Explicit ``"threads"``/``"device"`` is honored (``"device"`` requires
+    ``mode="threads"`` — the simulated clock has no device queues to race).
+    ``None`` auto-selects: the device pool whenever real parallelism is
+    available (``mode="threads"`` and more than one addressable device, or
+    an explicit device list), else the thread pool — so a plain 1-device
+    host keeps today's behavior and an ``XLA_FLAGS`` multi-device host (or
+    a real accelerator slice) gets device parallelism without a flag."""
+    if pool is None:
+        if mode == "threads" and (
+            devices is not None or len(jax.devices()) > 1
+        ):
+            return "device"
+        return "threads"
+    if pool not in ("threads", "device"):
+        raise ValueError(f"unknown pool {pool!r}; use 'threads' or 'device'")
+    if pool == "device" and mode != "threads":
+        raise ValueError(
+            f"pool='device' requires mode='threads', got mode={mode!r}"
+        )
+    return pool
+
+
+def make_pool(pool: str, n: int, straggler: StragglerModel, *,
+              mode: str = "threads", devices=None):
+    if pool == "device":
+        return DeviceWorkerPool(n, straggler, devices=devices)
+    return ThreadWorkerPool(n, straggler, mode=mode)
+
+
+class ThreadWorkerPool:
+    """Persistent per-worker single-thread executors (and the simulated
+    clock), computing on the default device.  One executor per worker: a
+    straggler still sleeping on an abandoned subtask keeps *its own* node
+    busy (its next subtask queues behind, like a real overloaded worker)
+    without ever blocking the fast workers."""
+
+    kind = "threads"
+
+    def __init__(self, n: int, straggler: StragglerModel, *,
+                 mode: str = "threads"):
+        assert mode in ("threads", "simulated")
+        self.n = n
+        self.straggler = straggler
+        self.mode = mode
+        self._pools: list[ThreadPoolExecutor] | None = None
+
+    # -- lifecycle ---------------------------------------------------------
+    def _ensure_pools(self) -> list[ThreadPoolExecutor]:
+        if self._pools is None:
+            self._pools = [
+                ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix=f"fcdcc-worker-{i}"
+                )
+                for i in range(self.n)
+            ]
+        return self._pools
+
+    def shutdown(self) -> None:
+        pools, self._pools = self._pools, None
+        if pools:
+            for ex in pools:
+                ex.shutdown(wait=False, cancel_futures=True)
+
+    # -- program/filter placement ------------------------------------------
+    def program(self, key: tuple, raw, i: int, jit_cache: dict):
+        """All workers share ONE jitted program on the default device (the
+        cluster's cache); per-worker specialization is a device-pool thing."""
+        fn = jit_cache.get(key)
+        if fn is None:
+            fn = jit_cache[key] = jax.jit(raw)
+        return fn
+
+    def resident_filters(self, name: str, ke):
+        return ke  # single device: the master copy IS the resident copy
+
+    def drop_filters(self, prefix: str) -> None:
+        pass
+
+    def gather(self, arr):
+        return arr
+
+    def warm(self, fn, xe, ke) -> None:
+        """Compile outside the timed collect: one worker-0 call suffices —
+        every worker runs the same program on the same device."""
+        jax.block_until_ready(fn(0)(xe[0], _ke_of(ke, 0)))
+
+    # -- dispatch / reap ---------------------------------------------------
+    def submit(self, fn, xe, ke) -> PendingBatch:
+        delays = self.straggler.delays
+        worker_times = [
+            float("inf") if not np.isfinite(delays[i]) else float("nan")
+            for i in range(self.n)
+        ]
+
+        def work(i):
+            if not np.isfinite(delays[i]):
+                raise RuntimeError(f"worker {i} failed")
+            t = time.perf_counter()
+            out = jax.block_until_ready(fn(i)(xe[i], _ke_of(ke, i)))
+            dt = time.perf_counter() - t
+            if self.mode == "threads" and delays[i] > 0:
+                time.sleep(delays[i])
+            worker_times[i] = dt + delays[i]
+            return i, out
+
+        t_start = time.perf_counter()
+        futures: dict[int, Future] = {}
+        results: dict[int, object] = {}
+        if self.mode == "threads":
+            pools = self._ensure_pools()
+            futures = {i: pools[i].submit(work, i) for i in range(self.n)}
+        else:  # simulated clock: compute all live workers synchronously
+            for i in range(self.n):
+                if np.isfinite(delays[i]):
+                    _, out = work(i)
+                    results[i] = out
+        return PendingBatch(futures, results, worker_times, t_start)
+
+    def collect(self, pending: PendingBatch, delta: int):
+        results = dict(pending.results)
+        if self.mode == "threads":
+            results = {}
+            outstanding = set(pending.futures.values())
+            while len(results) < delta and outstanding:
+                done, outstanding = wait(outstanding, return_when=FIRST_COMPLETED)
+                for f in done:
+                    try:
+                        i, out = f.result()
+                        results[i] = out
+                    except RuntimeError:
+                        pass
+            t_compute = time.perf_counter() - pending.t_start
+            for f in outstanding:  # abandon stragglers, don't join them
+                f.cancel()
+        else:  # completion time = max simulated clock over the chosen delta
+            order = sorted(results, key=lambda i: pending.worker_times[i])
+            results = {i: results[i] for i in order[:delta]}
+            t_compute = (
+                max(pending.worker_times[i] for i in results)
+                if results else float("inf")
+            )
+        return results, list(pending.worker_times), t_compute
+
+
+class DeviceWorkerPool:
+    """n coded workers pinned one-per-``jax.Device`` (round-robin when the
+    mesh is smaller), with per-device resident filters and per-device jit
+    caches.  See the module docstring for the dispatch/reap model."""
+
+    kind = "device"
+
+    def __init__(self, n: int, straggler: StragglerModel, *, devices=None,
+                 mesh=None, poll_interval_s: float = 50e-6):
+        from repro.launch.mesh import make_worker_mesh
+        from repro.sharding import worker_devices
+
+        self.n = n
+        self.straggler = straggler
+        self.mesh = mesh if mesh is not None else make_worker_mesh(n, devices)
+        self.devices = worker_devices(self.mesh, n)  # len n (round-robin)
+        # decode runs on the master device: where the default jit places it
+        self.master = jax.devices()[0]
+        self._poll_interval_s = poll_interval_s
+        # per-(program key, device) jit cache: a separate jax.jit object per
+        # device keeps trace accounting per device (one shared jit would
+        # pool every device's specializations in one opaque cache), so the
+        # bounded-program contract can be asserted device by device
+        self._programs: dict[tuple, object] = {}
+        # resident filter shards: name -> (master ke ref, [per-device shard])
+        # — keyed by the cluster's namespaced layer name, invalidated by
+        # master-array identity so re-encoded filters are re-placed
+        self._filters: dict[str, tuple] = {}
+        self._timers: set[threading.Timer] = set()
+        self._timer_lock = threading.Lock()
+
+    # -- lifecycle ---------------------------------------------------------
+    def shutdown(self) -> None:
+        """Cancel undelivered delayed dispatches and drop device-resident
+        state (programs and filter shards re-materialize lazily on reuse)."""
+        with self._timer_lock:
+            timers, self._timers = set(self._timers), set()
+        for t in timers:
+            t.cancel()
+        self._programs.clear()
+        self._filters.clear()
+
+    # -- program/filter placement ------------------------------------------
+    def program(self, key: tuple, raw, i: int, jit_cache: dict = None):
+        dev = self.devices[i]
+        fn = self._programs.get((key, dev))
+        if fn is None:
+            fn = self._programs[(key, dev)] = jax.jit(raw)
+        return fn
+
+    def program_traces(self) -> dict:
+        """Per-device jit-trace counts ``{device: traces}`` — the device
+        pool's half of the bounded-program contract."""
+        out: dict = {}
+        for (_, dev), fn in self._programs.items():
+            out[dev] = out.get(dev, 0) + fn._cache_size()
+        return out
+
+    def resident_filters(self, name: str, ke) -> list:
+        """The per-device shard list for coded filters ``ke`` under the
+        namespaced layer ``name`` — placed once (the paper's pre-stored
+        filters), reused until ``ke`` is a different array."""
+        ent = self._filters.get(name)
+        if ent is None or ent[0] is not ke:
+            shards = [jax.device_put(ke[i], self.devices[i])
+                      for i in range(self.n)]
+            for s in shards:
+                s.block_until_ready()
+            ent = self._filters[name] = (ke, shards)
+        return ent[1]
+
+    def drop_filters(self, prefix: str) -> None:
+        for name in [k for k in self._filters if k.startswith(prefix)]:
+            del self._filters[name]
+
+    def gather(self, arr):
+        """One surviving shard to the master device (decode gathers only
+        the fastest delta — discarded shards never move)."""
+        return jax.device_put(arr, self.master)
+
+    def warm(self, fn, xe, ke) -> None:
+        """Compile the worker program on every live device (per-device jit
+        caches) outside the timed collect."""
+        outs = []
+        for i in range(self.n):
+            if np.isfinite(self.straggler.delays[i]):
+                outs.append(fn(i)(
+                    jax.device_put(xe[i], self.devices[i]), _ke_of(ke, i)
+                ))
+        for o in outs:
+            o.block_until_ready()
+
+    # -- dispatch / reap ---------------------------------------------------
+    def submit(self, fn, xe, ke) -> PendingBatch:
+        delays = self.straggler.delays
+        worker_times = [
+            float("inf") if not np.isfinite(delays[i]) else float("nan")
+            for i in range(self.n)
+        ]
+        results: dict[int, object] = {}
+        lock = threading.Lock()
+        t_start = time.perf_counter()
+        pending = PendingBatch({}, results, worker_times, t_start,
+                               expected=set(), lock=lock)
+
+        def dispatch(i):
+            # async: enqueues on device i's queue and returns immediately
+            out = fn(i)(jax.device_put(xe[i], self.devices[i]), _ke_of(ke, i))
+            with lock:
+                results[i] = out
+
+        for i in range(self.n):
+            if not np.isfinite(delays[i]):
+                continue  # dead worker: never dispatched
+            pending.expected.add(i)
+            if delays[i] > 0:
+                # injected straggler = delayed dispatch (simulated network/
+                # queueing delay ahead of the subtask)
+                self._defer(float(delays[i]), i, dispatch)
+            else:
+                dispatch(i)
+        return pending
+
+    def _defer(self, delay: float, i: int, dispatch) -> None:
+        def run():
+            try:
+                dispatch(i)
+            finally:
+                with self._timer_lock:
+                    self._timers.discard(timer)
+
+        timer = threading.Timer(delay, run)
+        timer.daemon = True
+        with self._timer_lock:
+            self._timers.add(timer)
+        timer.start()
+
+    def collect(self, pending: PendingBatch, delta: int):
+        """Poll per-array readiness until the fastest ``delta`` devices have
+        delivered; later arrivals are discarded (their device finishes the
+        subtask, naturally backpressuring its own next dispatch, but the
+        array is never gathered)."""
+        need = min(delta, len(pending.expected))
+        reaped: dict[int, object] = {}
+        while len(reaped) < need:
+            with pending.lock:
+                avail = {i: a for i, a in pending.results.items()
+                         if i not in reaped}
+            progressed = False
+            for i, a in avail.items():
+                if a.is_ready():
+                    reaped[i] = a
+                    pending.worker_times[i] = \
+                        time.perf_counter() - pending.t_start
+                    progressed = True
+                    if len(reaped) >= delta:
+                        break
+            if len(reaped) >= need:
+                break
+            if not progressed:
+                time.sleep(self._poll_interval_s)
+        t_compute = time.perf_counter() - pending.t_start
+        return reaped, list(pending.worker_times), t_compute
+
+
+def _ke_of(ke, i: int):
+    """Worker i's filter shard: list = pre-placed per-device shards
+    (device pool resident filters), array = indexed master copy."""
+    return ke[i]

@@ -54,6 +54,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -104,12 +105,18 @@ class CodedServer:
                  straggler: StragglerModel | None = None, *,
                  mode: str = "simulated", execution: str = "cluster",
                  bucket_sizes=None, max_inflight: int = 2,
-                 poll_interval_s: float = 0.005, model: str = "default"):
+                 poll_interval_s: float = 0.005, model: str = "default",
+                 pool: str | None = None, devices=None):
         if execution not in ("cluster", "direct"):
             raise ValueError(f"unknown execution mode {execution!r}")
         self.execution = execution
         self.mode = mode
         self.cluster: FcdccCluster | None = None
+        # worker-pool preference for the shared cluster ("threads"/"device"/
+        # None = auto): an explicit argument wins, else the first registered
+        # pipeline's own preference rides along
+        self._pool = pool
+        self._devices = devices
         self._straggler = straggler
         self._default_buckets = bucket_sizes
         self._default_max_inflight = max_inflight
@@ -132,7 +139,8 @@ class CodedServer:
                  backend: str = "lax", interpret: bool = True,
                  bucket_sizes=None, max_inflight: int = 2,
                  model: str | None = None,
-                 fuse_transitions: bool = False) -> "CodedServer":
+                 fuse_transitions: bool = False,
+                 pool: str | None = None, devices=None) -> "CodedServer":
         """Compile a named CNN (``lenet5``/``alexnet``/``vgg16``) into a
         bucketed resident pipeline and wrap a server around it; the model
         registers under ``model`` (default: the arch name).  Register more
@@ -150,6 +158,7 @@ class CodedServer:
             bucket_sizes=(bucket_sizes if bucket_sizes is not None
                           else DEFAULT_BUCKETS),
             fuse_transitions=fuse_transitions,
+            pool=pool, devices=devices,
         )
         return cls(pipeline, straggler, mode=mode, execution=execution,
                    max_inflight=max_inflight,
@@ -174,8 +183,6 @@ class CodedServer:
         sweep position, so under contention round counts converge to the
         weight ratio (a backlogged model waits at most the sum of the
         other models' weights between its rounds)."""
-        if self._thread is not None:
-            raise RuntimeError("register models before start()")
         if name in self.models:
             raise ValueError(f"model {name!r} already registered")
         if not isinstance(weight, int) or weight < 1:
@@ -212,19 +219,70 @@ class CodedServer:
         if self.cluster is None:
             # the cluster runs each pipeline's own worker programs, so it
             # must share the pipelines' backend (lax / pallas) and
-            # interpret knob
+            # interpret knob; the worker pool comes from the server's
+            # explicit preference, else the pipeline's
             self.cluster = FcdccCluster(
                 pipeline.specs[0].plan, self._straggler, mode=self.mode,
                 backend=pipeline.backend, interpret=pipeline.interpret,
+                pool=self._pool if self._pool is not None else pipeline.pool,
+                devices=(self._devices if self._devices is not None
+                         else pipeline.devices),
             )
         self.cluster.load_pipeline(pipeline, name)
+        # publish order matters for LIVE registration (engine running):
+        # the scheduler entry goes in LAST, after the pipeline is resident
+        # and the serving state exists — the engine loop resolves work it
+        # picked through ``self.models``/the cluster, so a model it can
+        # pick must already be fully registered
+        self.models[name] = _ModelState(name, self.cluster)
         self.scheduler.add_model(
             name, pipeline.pad_to_bucket, max_batch=pipeline.max_batch,
             max_inflight=(max_inflight if max_inflight is not None
                           else self._default_max_inflight),
             weight=weight,
         )
-        self.models[name] = _ModelState(name, self.cluster)
+
+    def unregister_model(self, name: str, *, drain: bool = True,
+                         timeout: float = 60.0) -> None:
+        """Remove model ``name`` from a (possibly live) server.
+
+        Two-phase teardown so the engine never touches a half-removed
+        model: first the model's scheduler is *closed* (new submits are
+        refused while queued + in-flight requests finish — or, with
+        ``drain=False``, are cancelled immediately), then it is *fenced*
+        (its ``pad_to_bucket``/bucket bindings are never consulted again)
+        and only then are the scheduler entry, serving state, resident
+        filters, and device-pool filter shards torn down.  On timeout the
+        model is left closed-but-registered and the ``TimeoutError``
+        surfaces (retry or ``drain=False`` to force)."""
+        if name not in self.models:
+            raise ValueError(
+                f"unknown model {name!r}; registered: {sorted(self.models)}"
+            )
+        sched = self.scheduler[name]
+        sched.close()
+        engine_live = self._thread is not None and not self._stop.is_set()
+        if drain and engine_live:
+            deadline = time.perf_counter() + timeout
+            while sched.has_work():
+                if time.perf_counter() > deadline:
+                    raise TimeoutError(
+                        f"model {name!r} still has in-flight work after "
+                        f"{timeout}s; retry or unregister with drain=False"
+                    )
+                time.sleep(self._poll_interval_s)
+        else:
+            sched.cancel_all(RuntimeError(f"model {name!r} unregistered"))
+        # fence BEFORE teardown: from here the engine can still hold a
+        # reference to the scheduler from a stale snapshot, but every entry
+        # point that would consult the model's bucket bindings refuses
+        sched.fence()
+        if not drain:  # cancel again: a request admitted during the close-
+            sched.cancel_all(  # to-cancel window must not be stranded
+                RuntimeError(f"model {name!r} unregistered"))
+        self.scheduler.remove_model(name)
+        del self.models[name]
+        self.cluster.unload_pipeline(name)
 
     def model_names(self) -> list[str]:
         return list(self.models)
@@ -382,8 +440,11 @@ class CodedServer:
                         sched.not_empty.wait(self._poll_interval_s)
                 continue
             name, batch = picked
+            state = self.models.get(name)
+            if state is None:  # unregistered between pick and advance: its
+                continue       # requests were already cancelled by the fence
             try:
-                self._advance(self.models[name], batch)
+                self._advance(state, batch)
             except Exception as err:  # degraded cluster etc: fail the batch
                 sched.retire(name, batch)
                 for req in batch.requests:

@@ -200,8 +200,29 @@ class Scheduler:
         self.pad_to_bucket = pad_to_bucket
         self.max_batch = max_batch
         self.max_inflight = max_inflight
+        # two-phase deregistration fencing (``CodedServer.unregister_model``):
+        # ``closed`` rejects NEW submits while queued + in-flight work
+        # drains; ``fenced`` additionally stops admission/coalescing — after
+        # the fence the model's ``pad_to_bucket``/bucket bindings are never
+        # consulted again, so the pipeline behind them can be torn down
+        self.closed = False
+        self.fenced = False
+
+    def close(self) -> None:
+        """Phase 1 of removal: reject new submits, keep serving what's in."""
+        self.closed = True
+
+    def fence(self) -> None:
+        """Phase 2 of removal: stop consulting this model's bucket bindings
+        entirely (implies ``close``).  Idempotent."""
+        self.closed = True
+        self.fenced = True
 
     def submit(self, x: jnp.ndarray) -> RequestHandle:
+        if self.closed:
+            raise RuntimeError(
+                f"model {self.name!r} is being unregistered; no new requests"
+            )
         return self.queue.submit(x)
 
     def has_work(self) -> bool:
@@ -214,6 +235,8 @@ class Scheduler:
         if capacity allows.  Called at every layer boundary — this is the
         continuous-batching admission point.  ``limit`` caps the batch
         below ``max_batch`` (tests use it to force fragmented batches)."""
+        if self.fenced:  # mid-removal: bucket bindings must not be consulted
+            return None
         with self._lock:
             if len(self.inflight) >= self.max_inflight:
                 return None
@@ -248,6 +271,8 @@ class Scheduler:
         layout; zero padding encodes to zero shares).  Returns the number
         of merges performed (the engine accounts them into
         ``MetricsCollector`` — the single counter)."""
+        if self.fenced:  # pad_to_bucket is off-limits mid-removal
+            return 0
         merges = 0
         with self._lock:
             by_depth: dict[int, list[ScheduledBatch]] = {}
@@ -351,18 +376,44 @@ class MultiScheduler:
     def add_model(self, name: str, pad_to_bucket: Callable, *,
                   max_batch: int, max_inflight: int = 2,
                   weight: int = 1) -> Scheduler:
-        if name in self.schedulers:
-            raise ValueError(f"model {name!r} already registered")
         if not isinstance(weight, int) or weight < 1:
             raise ValueError(f"weight must be an integer >= 1, got {weight!r}")
         sched = Scheduler(
             pad_to_bucket, max_batch=max_batch, max_inflight=max_inflight,
             name=name, queue=RequestQueue(self.not_empty, self._ids),
         )
-        self.schedulers[name] = sched
-        self.weights[name] = weight
-        self.served_rounds[name] = 0
+        # registry mutations serialize on ``not_empty``: the engine may be
+        # registering/removing a model live while its loop snapshots names
+        with self.not_empty:
+            if name in self.schedulers:
+                raise ValueError(f"model {name!r} already registered")
+            self.schedulers[name] = sched
+            self.weights[name] = weight
+            self.served_rounds[name] = 0
         return sched
+
+    def remove_model(self, name: str) -> Scheduler:
+        """Drop model ``name`` from the registry (its scheduler should
+        already be fenced and drained/cancelled — this only unlinks it).
+        The rotating sweep positions are plain indices modulo the live name
+        list, re-snapshotted every call, so no re-indexing is needed."""
+        with self.not_empty:
+            sched = self.schedulers.pop(name)
+            self.weights.pop(name, None)
+            self.served_rounds.pop(name, None)
+        return sched
+
+    def fence(self, name: str) -> Scheduler:
+        """Fence one model mid-removal: its ``pad_to_bucket``/bucket
+        bindings are never consulted again (submit/admit/coalesce all
+        refuse) while the registry entry stays visible for draining."""
+        sched = self.schedulers[name]
+        sched.fence()
+        return sched
+
+    def _snapshot(self) -> list[str]:
+        with self.not_empty:
+            return list(self.schedulers)
 
     def __getitem__(self, name: str) -> Scheduler:
         return self.schedulers[name]
@@ -371,19 +422,24 @@ class MultiScheduler:
         return self.schedulers[model].submit(x)
 
     def has_work(self) -> bool:
-        return any(s.has_work() for s in self.schedulers.values())
+        return any(s.has_work() for s in list(self.schedulers.values()))
 
     def queued(self) -> int:
-        return sum(len(s.queue) for s in self.schedulers.values())
+        return sum(len(s.queue) for s in list(self.schedulers.values()))
 
     def admit(self) -> ScheduledBatch | None:
         """Admit one new batch from the next model (rotating) that has both
         queued requests and free in-flight capacity.  The engine loops this
-        until it returns None — all models' capacity fills at one boundary."""
-        names = list(self.schedulers)
+        until it returns None — all models' capacity fills at one boundary.
+        The name list is a lock-guarded snapshot: a model registered or
+        removed concurrently is simply missed/skipped this boundary."""
+        names = self._snapshot()
         for off in range(len(names)):
             name = names[(self._admit_rr + off) % len(names)]
-            batch = self.schedulers[name].admit()
+            sched = self.schedulers.get(name)
+            if sched is None:  # removed since the snapshot
+                continue
+            batch = sched.admit()
             if batch is not None:
                 self._admit_rr = (self._admit_rr + off + 1) % len(names)
                 return batch
@@ -392,8 +448,9 @@ class MultiScheduler:
     def coalesce(self) -> dict[str, int]:
         """Equal-depth merges per model (empty dict = nothing merged)."""
         out = {}
-        for name, sched in self.schedulers.items():
-            merges = sched.coalesce()
+        for name in self._snapshot():
+            sched = self.schedulers.get(name)
+            merges = sched.coalesce() if sched is not None else 0
             if merges:
                 out[name] = merges
         return out
@@ -404,24 +461,30 @@ class MultiScheduler:
         ``weight=w`` is granted up to ``w`` consecutive rounds before the
         sweep position advances; skipping an idle model forfeits any credit
         it had at its position (positional bound, no banked deficit)."""
-        names = list(self.schedulers)
+        names = self._snapshot()
         for off in range(len(names)):
             pos = (self._pick_rr + off) % len(names)
             name = names[pos]
-            batch = self.schedulers[name].next_batch()
+            sched = self.schedulers.get(name)
+            if sched is None:  # removed since the snapshot
+                continue
+            batch = sched.next_batch()
             if batch is not None:
                 if off:  # swept past idle models: restart credit here
                     self._pick_rr, self._pick_credit = pos, 0
                 self._pick_credit += 1
-                if self._pick_credit >= self.weights[name]:
+                if self._pick_credit >= self.weights.get(name, 1):
                     self._pick_rr = (pos + 1) % len(names)
                     self._pick_credit = 0
-                self.served_rounds[name] += 1
+                if name in self.served_rounds:
+                    self.served_rounds[name] += 1
                 return name, batch
         return None
 
     def retire(self, model: str, batch: ScheduledBatch) -> None:
-        self.schedulers[model].retire(batch)
+        sched = self.schedulers.get(model)
+        if sched is not None:  # may have been unregistered mid-flight
+            sched.retire(batch)
 
     def cancel_all(self, error: BaseException) -> int:
-        return sum(s.cancel_all(error) for s in self.schedulers.values())
+        return sum(s.cancel_all(error) for s in list(self.schedulers.values()))

@@ -19,8 +19,23 @@ from repro import compat
 # canonical logical axes
 BATCH = ("pod", "data")  # batch (or sequence for long-context) shards here
 MODEL = "model"
+WORKERS = "workers"  # the coded cluster's n-worker axis (1-D worker mesh)
 
-__all__ = ["shard_hint", "BATCH", "MODEL", "resolve_pspec"]
+__all__ = ["shard_hint", "BATCH", "MODEL", "WORKERS", "resolve_pspec",
+           "worker_devices"]
+
+
+def worker_devices(mesh, n: int) -> list:
+    """The n coded workers' device pinning, derived from a worker mesh
+    (``launch.mesh.make_worker_mesh``): worker ``i`` runs on device
+    ``i % mesh_size``.  With fewer physical devices than workers the
+    round-robin oversubscribes evenly (the 1-device degenerate case pins
+    everything to that device — functionally the thread pool's layout);
+    with ``mesh_size >= n`` every worker owns its device exclusively."""
+    devs = list(mesh.devices.flat)
+    if not devs:
+        raise ValueError("empty mesh")
+    return [devs[i % len(devs)] for i in range(n)]
 
 
 def _resolve_dim(dim: int, cand, mesh_shape) -> tuple[str, ...] | None:

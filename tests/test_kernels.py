@@ -137,3 +137,62 @@ def test_crme_encode_decode_kernels_roundtrip():
     d = np.linalg.inv(e.T)
     back = crme_decode(d, coded[jnp.asarray(sub)])
     np.testing.assert_allclose(np.asarray(back), np.asarray(parts), atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [
+    # (ea, b, c, hh, wp, eb, nb, kh, kw, stride)
+    (2, None, 3, 14, 14, 2, 4, 3, 3, 1),   # multi-share, multi-group
+    (2, 2, 8, 12, 16, 2, 8, 3, 3, 1),      # batched
+    (1, None, 4, 17, 17, 1, 6, 5, 5, 2),   # strided, 5x5
+    (3, 1, 16, 10, 10, 2, 16, 1, 1, 1),    # 1x1: widest channel windows
+    (1, None, 2, 9, 9, 3, 5, 2, 2, 1),     # tiny odd geometry
+])
+def test_worker_stream_k_bit_parity(shape):
+    """The K-streamed fused worker kernel (share in HBM, per-chunk channel
+    windows double-buffered into VMEM) is bit-identical to the
+    whole-share-resident fused kernel: same taps, same bk-chunk fp32
+    accumulation order."""
+    from repro.kernels.conv2d.kernel import coded_worker_pallas
+
+    ea, b, c, hh, wp, eb, nb, kh, kw, stride = shape
+    xshape = (ea, b, c, hh, wp) if b else (ea, c, hh, wp)
+    xe = jnp.asarray(RNG.standard_normal(xshape), jnp.float32)
+    ke = jnp.asarray(RNG.standard_normal((eb, nb, c, kh, kw)), jnp.float32)
+    resident = coded_worker_pallas(xe, ke, stride, fused_im2col=True,
+                                   stream_k=False)
+    streamed = coded_worker_pallas(xe, ke, stride, stream_k=True)
+    assert np.array_equal(np.asarray(resident), np.asarray(streamed))
+
+
+def test_worker_stream_k_auto_fallback(monkeypatch):
+    """When the whole share no longer fits the VMEM guard but the streamed
+    buffers do, the fused path is kept via stream_k auto-fallback (instead
+    of dropping to the two-step HBM-patch path) — and stays bit-identical
+    to the resident result computed under the roomy guard."""
+    import repro.kernels.conv2d.kernel as K
+
+    c, hh, wp, kh = 64, 40, 40, 3
+    xe = jnp.asarray(RNG.standard_normal((1, c, hh, wp)), jnp.float32)
+    ke = jnp.asarray(RNG.standard_normal((1, 8, c, kh, kh)), jnp.float32)
+    ho = wo = hh - kh + 1
+    bo = K.default_bo(ho, wo)
+    ref = K.coded_worker_pallas(xe, ke, 1, fused_im2col=True, stream_k=False)
+    monkeypatch.setattr(K, "_FUSED_VMEM_ELEMS", 90_000)  # share = 102400
+    assert not K._fused_feasible((1, c, hh, wp), kh, kh, 1, ho, wo, bo)
+    assert K._stream_feasible((1, c, hh, wp), kh, kh, 1, ho, wo, bo, 128)
+    auto = K.coded_worker_pallas(xe, ke, 1)  # picks the streamed fused path
+    assert np.array_equal(np.asarray(ref), np.asarray(auto))
+
+
+def test_stream_k_channel_windows():
+    """Window algebra: every chunk's channel window covers exactly its real
+    columns, and windows stay small relative to C for multi-tap kernels."""
+    from repro.kernels.conv2d.kernel import _k_windows, _pad_to
+
+    ck, bk, kh, kw = 64 * 9, 128, 3, 3
+    wins = _k_windows(ck, bk, kh, kw, _pad_to(ck, bk))
+    for kk, (c_lo, cw) in enumerate(wins):
+        k0, k1 = kk * bk, min(ck, (kk + 1) * bk) - 1
+        assert c_lo == k0 // (kh * kw)
+        assert c_lo + cw - 1 == k1 // (kh * kw)
+    assert max(cw for _, cw in wins) <= -(-bk // (kh * kw)) + 1

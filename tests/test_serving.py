@@ -746,8 +746,12 @@ def test_register_model_validation():
         server.submit(_images(1)[0], "nope")
     server.start()
     try:
-        with pytest.raises(RuntimeError, match="before start"):
-            server.register_model("late", _pipeline_b()[0])
+        # live registration: a model added while the engine loop is running
+        # serves without a restart (scheduler is published last, so the
+        # loop never sees a half-registered model)
+        server.register_model("late", _pipeline_b()[0])
+        y = server.submit(_images_b(1)[0], "late").result(timeout=60.0)
+        assert y.shape == _pipeline_b()[0].run(_images_b(1)[0]).shape
     finally:
         server.shutdown()
     # a server with no model registered refuses to start
@@ -950,3 +954,96 @@ def test_percentile_and_stats_math():
     assert s.mean_batch_real == pytest.approx(2.0)
     mc.reset()
     assert mc.stats().completed == 0
+
+
+# -- live (de)registration ------------------------------------------------
+def test_unregister_model_drains_then_removes():
+    """Two-phase removal on a live engine: close (no new submits) -> drain
+    queued work -> fence -> remove.  In-flight requests of the removed
+    model complete; the co-resident model keeps serving; every cluster
+    namespace (pipelines, resident filters) is reclaimed."""
+    server = CodedServer(mode="simulated")
+    server.register_model("a", _pipeline()[0])
+    server.register_model("b", _pipeline_b()[0])
+    with server:
+        last = server.submit(_images_b(1)[0], "b")
+        server.unregister_model("b", drain=True, timeout=60.0)
+        assert last.result(timeout=1.0) is not None  # drained, not dropped
+        with pytest.raises(ValueError, match="unknown model"):
+            server.submit(_images_b(1)[0], "b")
+        y = server.submit(_images(1)[0], "a").result(timeout=60.0)
+        assert y is not None
+        assert "b" not in server.models
+        assert "b" not in server.cluster.pipelines
+        assert not any(k.startswith("b/") for k in server.cluster._resident)
+        # re-registration under the freed name works on the live engine
+        server.register_model("b", _pipeline_b()[0])
+        assert server.submit(_images_b(1)[0], "b").result(timeout=60.0) \
+            is not None
+
+
+def test_unregister_model_no_drain_cancels_queued():
+    server = CodedServer(mode="simulated")
+    server.register_model("a", _pipeline()[0])
+    server.register_model("b", _pipeline_b()[0])
+    # engine not started: queued work cannot drain, so drain=False cancels
+    h = server.scheduler["b"].submit(_images_b(1)[0])
+    server.unregister_model("b", drain=False)
+    with pytest.raises(RuntimeError, match="unregistered"):
+        h.result(timeout=1.0)
+    with pytest.raises(ValueError, match="unknown model"):
+        server.submit(_images_b(1)[0], "b")
+    with pytest.raises(ValueError, match="unknown model"):
+        server.unregister_model("b")
+
+
+def test_scheduler_fence_blocks_bucket_bindings():
+    """A fenced scheduler must never consult pad_to_bucket again: admit
+    refuses new batches and coalesce refuses merges *before* touching the
+    bucket bindings (they may already be unloaded mid-removal)."""
+    from repro.serving.scheduler import Scheduler
+
+    pipe, _ = _pipeline(bucket_sizes=(1, 2))
+    live = {"ok": True}
+
+    def pad(x):
+        assert live["ok"], "pad_to_bucket consulted after fence"
+        return pipe.pad_to_bucket(x)
+
+    sched = Scheduler(pad, max_batch=2, max_inflight=4)
+    for _ in range(2):
+        sched.queue.submit(_images(1)[0])
+        sched.admit(limit=1)
+    assert len(sched.inflight) == 2
+    sched.close()
+    with pytest.raises(RuntimeError, match="unregistered"):
+        sched.submit(_images(1)[0])
+    assert sched.has_work()  # queued/in-flight work survives close
+    sched.fence()
+    live["ok"] = False  # bindings gone: any pad call from here is a bug
+    sched.queue.submit(_images(1)[0])  # raced in before close... simulate
+    assert sched.admit() is None
+    assert sched.coalesce() == 0
+
+
+def test_multischeduler_remove_is_safe_mid_iteration():
+    """The engine loop iterates a snapshot: removing a model between
+    next_batch calls must neither KeyError nor starve the survivor."""
+    from repro.serving.scheduler import MultiScheduler
+
+    pipe, _ = _pipeline(bucket_sizes=(1, 2))
+    multi = MultiScheduler()
+    multi.add_model("a", pipe.pad_to_bucket, max_batch=2, max_inflight=4)
+    multi.add_model("b", pipe.pad_to_bucket, max_batch=2, max_inflight=4)
+    multi.submit("a", _images(1)[0])
+    multi.submit("b", _images(1)[0])
+    assert multi.admit() is not None
+    assert multi.admit() is not None
+    removed = multi.remove_model("b")
+    assert removed.cancel_all(RuntimeError("gone")) >= 0
+    picked = multi.next_batch()
+    assert picked is not None and picked[0] == "a"
+    with pytest.raises(KeyError):
+        multi.remove_model("b")
+    with pytest.raises(ValueError, match="already registered"):
+        multi.add_model("a", pipe.pad_to_bucket, max_batch=2, max_inflight=4)
