@@ -1,6 +1,9 @@
 #!/usr/bin/env bash
-# Fast CI suite: the ROADMAP tier-1 verify command with slow (VGG-sized)
-# cases deselected, then — when no pytest args override the selection —
+# Fast CI suite: first the static-analysis gate (python -m repro.analysis
+# --strict: jit-contract checks traced over every program the pipeline
+# family can build, plus the concurrency lint over serving/runtime — any
+# error OR warning fails before a single test runs), then the ROADMAP
+# tier-1 verify command with slow (VGG-sized) cases deselected, then — when no pytest args override the selection —
 # the slow-marked alexnet/vgg16 pallas pipeline parity geometries (the
 # fused coded-worker kernel must match lax on every CNN_SPECS geometry;
 # the fast lenet5 case already ran in the main suite), then the
@@ -38,6 +41,11 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export REPRO_TEST_TIMEOUT="${REPRO_TEST_TIMEOUT:-300}"
+# first-stage gate: static analysis (jit contracts over the full pipeline
+# family + concurrency lint of serving/runtime) — strict means warnings
+# fail too; machine-readable findings land in results/analysis_findings.json
+mkdir -p results
+python -m repro.analysis --strict --json-out results/analysis_findings.json
 python -m pytest -x -q -m "not slow" "$@"
 # skip the extra block only when the caller overrides marker selection
 # (e.g. `-m ""` already ran the slow cases in the main suite above)

@@ -1,0 +1,20 @@
+"""Static analysis for the coded serving stack.
+
+Two analyzer families, both runnable without executing any pipeline data:
+
+- ``contracts``: enumerates the shape space of every program the pipeline
+  family can build (CNN archs x buckets x backends x transition fusing) and
+  checks jit contracts on the traced jaxprs / lowered HLO — no baked
+  decode/encode constants, donation wired through, no f64 / weak types /
+  host callbacks, and a static proof of the bounded-trace contract.
+- ``concurrency``: an AST lint over the threaded layers (``serving/``,
+  ``runtime/``, ``kernels/autotune.py``) — ``# guarded-by:`` enforcement,
+  lock-acquisition-order cycles, ``Condition.wait`` predicate loops, and
+  thread/executor lifecycle.
+
+CLI: ``python -m repro.analysis --strict`` (see ``__main__``).
+"""
+
+from repro.analysis.findings import Finding, Report, Severity
+
+__all__ = ["Finding", "Report", "Severity"]

@@ -39,10 +39,55 @@ from .partition import ConvGeometry, merge_output, partition_transition
 __all__ = [
     "CodedLayerSpec",
     "CodedPipeline",
+    "ProgramCell",
     "plan_layers",
     "build_cnn_pipeline",
     "relu_pool",
 ]
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramCell:
+    """One (program, argument-shape) cell of a pipeline's shape space.
+
+    ``CodedPipeline.program_space`` enumerates every cell the pipeline can
+    ever launch — per execution mode, layer, and batch bucket — as
+    ``ShapeDtypeStruct`` arguments plus the jitted callable, so static
+    analyzers (``repro.analysis``) can trace/lower each program without
+    running data.
+
+    ``kind``: ``encoder`` / ``worker`` / ``transition`` / ``decoder``.
+    ``mode``: ``direct`` (single-process vmapped path) or ``cluster``
+    (per-worker threaded-runtime path).
+    ``cache_key``: the pipeline-side program-cache key; cells sharing
+    (kind, mode, cache_key) and an argument signature share one jit trace,
+    which is what the bounded-trace proof counts.
+    ``allowed_const_shapes``: shapes a traced constant may legitimately
+    take in this cell (e.g. the cluster encoder bakes the full-n A-code
+    matrix — subset-independent, so it cannot cause retraces).
+    ``donate_argnums``: argument indices the program donates.
+    """
+
+    cell_id: str
+    kind: str
+    mode: str
+    layer: int
+    bucket: int
+    cache_key: tuple
+    fn: callable
+    args: tuple
+    allowed_const_shapes: tuple = ()
+    donate_argnums: tuple = ()
+
+    @property
+    def trace_signature(self) -> tuple:
+        """What jit specializes on: program identity + argument avals."""
+        return (
+            self.kind,
+            self.mode,
+            self.cache_key,
+            tuple((a.shape, str(a.dtype)) for a in self.args),
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -604,6 +649,109 @@ class CodedPipeline:
         self._cluster_programs.clear()
         self._transitions.clear()
         return tuned
+
+    # -- shape-space enumeration -------------------------------------------
+    def program_space(self, bucket_sizes: Sequence[int] | None = None, *,
+                      modes: Sequence[str] = ("direct", "cluster")):
+        """Enumerate every program cell this pipeline can launch, in shape
+        space — no data is executed.
+
+        Yields one ``ProgramCell`` per (mode, layer, bucket, program kind),
+        walking the encode -> worker -> transition/decode chain with
+        ``jax.eval_shape`` exactly as execution would (the same walk
+        ``autotune_kernels`` performs).  ``direct`` is the single-process
+        path (vmapped worker over the fastest-delta axis, subset-width
+        re-encodes); ``cluster`` is the threaded-runtime path (per-worker
+        programs, full-n re-encodes, full-matrix encoder).  Survivor
+        subsets never appear in the signatures — only ``delta`` (the subset
+        *size*) does — which is the shape-space half of the no-retrace
+        contract; ``repro.analysis`` checks the other half (matrices enter
+        as runtime arguments, not baked constants) on the traced jaxprs.
+        """
+        buckets = (self.normalize_buckets(bucket_sizes) if bucket_sizes
+                   else (self.bucket_sizes or (1,)))
+        last = len(self.specs) - 1
+        dtype = self.input_dtype
+        for mode in modes:
+            if mode not in ("direct", "cluster"):
+                raise ValueError(f"unknown mode {mode!r}")
+            for bucket in buckets:
+                x = jax.ShapeDtypeStruct((bucket,) + self.input_shape, dtype)
+                for idx, (spec, layer) in enumerate(
+                        zip(self.specs, self.layers)):
+                    def cid(kind):
+                        return f"{spec.name}[b={bucket}]/{kind}:{mode}"
+
+                    ids = self.layer_worker_ids(idx)
+                    delta = len(ids)
+                    m_sel = jax.ShapeDtypeStruct(
+                        self.encode_columns(idx, ids).shape, dtype)
+                    ke_shape = self.coded_filters[idx].shape[1:]
+                    # the encoder runs on every layer when unfused, and only
+                    # on layer 0 when transitions re-encode in coded space
+                    if not self.fuse_transitions or idx == 0:
+                        if mode == "direct":
+                            yield ProgramCell(
+                                cid("encoder"), "encoder", mode, idx, bucket,
+                                (idx,), self.encoder(idx), (x, m_sel))
+                        else:
+                            # the cluster encodes all n workers' shares with
+                            # the resident full matrix (one-arg call bakes
+                            # it — subset-independent, hence allowed)
+                            yield ProgramCell(
+                                cid("encoder"), "encoder", mode, idx, bucket,
+                                (idx,), self.encoder(idx), (x,),
+                                allowed_const_shapes=(
+                                    tuple(layer.a_code.matrix.shape),))
+                    xe = jax.eval_shape(layer.encode_inputs, x, m_sel)
+                    if mode == "direct":
+                        yield ProgramCell(
+                            cid("worker"), "worker", mode, idx, bucket,
+                            spec.program_key, self.worker_program(idx),
+                            (jax.ShapeDtypeStruct(
+                                (delta,) + xe.shape[1:], xe.dtype),
+                             jax.ShapeDtypeStruct(
+                                (delta,) + ke_shape, dtype)))
+                    else:
+                        yield ProgramCell(
+                            cid("worker"), "worker", mode, idx, bucket,
+                            spec.program_key,
+                            self.worker_program(idx, over_workers=False),
+                            (jax.ShapeDtypeStruct(xe.shape[1:], xe.dtype),
+                             jax.ShapeDtypeStruct(ke_shape, dtype)))
+                    outs = jax.eval_shape(
+                        jax.vmap(layer.worker_compute),
+                        jax.ShapeDtypeStruct((delta,) + xe.shape[1:],
+                                             xe.dtype),
+                        jax.ShapeDtypeStruct((delta,) + ke_shape, dtype),
+                    )
+                    q = spec.plan.k_a * spec.plan.k_b
+                    d = jax.ShapeDtypeStruct((q, q), dtype)
+                    if self.fuse_transitions and idx < last:
+                        if mode == "direct":
+                            m_next = jax.ShapeDtypeStruct(
+                                self.encode_columns(
+                                    idx + 1,
+                                    self.layer_worker_ids(idx + 1)).shape,
+                                dtype)
+                        else:
+                            m_next = jax.ShapeDtypeStruct(
+                                self.encode_columns_all(idx + 1).shape,
+                                dtype)
+                        yield ProgramCell(
+                            cid("transition"), "transition", mode, idx,
+                            bucket,
+                            self._transition_key(spec, self.specs[idx + 1]),
+                            self.transition_fn(idx), (outs, d, m_next),
+                            donate_argnums=(
+                                (0,) if self.donate_transitions else ()))
+                    if not self.fuse_transitions or idx == last:
+                        yield ProgramCell(
+                            cid("decoder"), "decoder", mode, idx, bucket,
+                            (idx,), self.decoder_fn(idx), (outs, d))
+                    x = jax.ShapeDtypeStruct(
+                        (bucket, spec.geo.out_channels, spec.out_hw,
+                         spec.out_hw), dtype)
 
     # -- execution ---------------------------------------------------------
     def layer_worker_ids(self, idx: int, worker_ids=None) -> tuple[int, ...]:

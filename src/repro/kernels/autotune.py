@@ -39,8 +39,10 @@ __all__ = [
 ]
 
 _LOCK = threading.RLock()
-_CACHE: dict | None = None  # key -> {"params": {...}, "us": float, ...}
-_SWEEPS = 0  # how many real sweeps ran (tests assert cache hits skip them)
+# key -> {"params": {...}, "us": float, ...}  # guarded-by: _LOCK
+_CACHE: dict | None = None
+# how many real sweeps ran (tests assert cache hits skip them)  # guarded-by: _LOCK
+_SWEEPS = 0
 
 # Bounded candidate sets: every candidate is a full static-arg tuple, so a
 # sweep costs len(candidates) extra jit traces ONCE per cell, never per run.

@@ -55,6 +55,7 @@ Entry points:
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 
 import jax
@@ -123,23 +124,28 @@ class FcdccCluster:
         # the device pool whenever real parallelism is available
         self.pool = resolve_pool(pool, mode, devices)
         self._devices = devices
-        self._pool_obj = None  # built lazily on first dispatch/placement
+        # one reentrant lock over pool creation and every persistent cache:
+        # the engine thread and caller threads (load/unload/preload) hit
+        # these concurrently, and the lazy pool build must not run twice
+        self._registry_lock = threading.RLock()
+        # built lazily on first dispatch/placement
+        self._pool_obj = None  # guarded-by: self._registry_lock
         # persistent caches ------------------------------------------------
-        self._coded_layers: dict[tuple, CodedConv2d] = {}
-        self._programs: dict[tuple, object] = {}
+        self._coded_layers: dict[tuple, CodedConv2d] = {}  # guarded-by: self._registry_lock
+        self._programs: dict[tuple, object] = {}  # guarded-by: self._registry_lock
         # resident coded filters: one entry per layer name (re-planning a
         # layer replaces its entry rather than accumulating), guarded by the
         # filter-code key so filters encoded under one code never serve a
         # different plan's decode.  Entry: (code_key, coded_filters, src).
         # Pipeline layers live under "model/layer" namespaced keys so two
         # models with the same layer names never collide.
-        self._resident: dict[str, tuple] = {}
+        self._resident: dict[str, tuple] = {}  # guarded-by: self._registry_lock
         # registered pipelines by model name (insertion-ordered: the first
         # one is the default for single-model callers)
-        self.pipelines: dict[str, CodedPipeline] = {}
+        self.pipelines: dict[str, CodedPipeline] = {}  # guarded-by: self._registry_lock
         # worker-program signatures already run once (compile happened
         # outside a timed collect); keyed by (program key, operand shapes)
-        self._warmed: set[tuple] = set()
+        self._warmed: set[tuple] = set()  # guarded-by: self._registry_lock
 
     @property
     def n(self) -> int:
@@ -147,12 +153,13 @@ class FcdccCluster:
 
     # -- persistent worker pool --------------------------------------------
     def _pool_impl(self):
-        if self._pool_obj is None:
-            self._pool_obj = make_pool(
-                self.pool, self.n, self.straggler, mode=self.mode,
-                devices=self._devices,
-            )
-        return self._pool_obj
+        with self._registry_lock:
+            if self._pool_obj is None:
+                self._pool_obj = make_pool(
+                    self.pool, self.n, self.straggler, mode=self.mode,
+                    devices=self._devices,
+                )
+            return self._pool_obj
 
     @property
     def worker_devices(self) -> list | None:
@@ -181,8 +188,10 @@ class FcdccCluster:
         """Release the worker pool (idempotent; the cluster can be used
         again afterwards — executors and device-resident state are
         re-created lazily)."""
-        if self._pool_obj is not None:
-            self._pool_obj.shutdown()
+        with self._registry_lock:
+            pool = self._pool_obj
+        if pool is not None:
+            pool.shutdown()
 
     def __del__(self):  # best-effort: interpreter teardown may race us
         try:
@@ -200,12 +209,13 @@ class FcdccCluster:
     def coded_layer(self, geo: ConvGeometry, plan: FcdccPlan | None = None) -> CodedConv2d:
         plan = plan or self.plan
         key = (plan, geo)
-        layer = self._coded_layers.get(key)
-        if layer is None:
-            layer = self._coded_layers[key] = CodedConv2d(
-                plan, geo, backend=self.backend, interpret=self.interpret
-            )
-        return layer
+        with self._registry_lock:
+            layer = self._coded_layers.get(key)
+            if layer is None:
+                layer = self._coded_layers[key] = CodedConv2d(
+                    plan, geo, backend=self.backend, interpret=self.interpret
+                )
+            return layer
 
     def worker_program(self, layer: CodedConv2d):
         """Jitted one-worker program on the master device, shared by layers
@@ -213,10 +223,11 @@ class FcdccCluster:
         eliminated).  The device pool compiles its own per-device twins of
         the same callable (``DeviceWorkerPool.program``)."""
         key = (layer.plan.ell_a, layer.plan.ell_b, layer.geo.stride)
-        fn = self._programs.get(key)
-        if fn is None:
-            fn = self._programs[key] = jax.jit(layer.worker_compute)
-        return fn
+        with self._registry_lock:
+            fn = self._programs.get(key)
+            if fn is None:
+                fn = self._programs[key] = jax.jit(layer.worker_compute)
+            return fn
 
     @staticmethod
     def _filter_code_key(plan: FcdccPlan, geo: ConvGeometry) -> tuple:
@@ -233,7 +244,8 @@ class FcdccCluster:
         plan = plan or self.plan
         layer = self.coded_layer(geo, plan)
         ke = jax.block_until_ready(layer.encode_filters(k))
-        self._resident[name] = (self._filter_code_key(plan, geo), ke, k)
+        with self._registry_lock:
+            self._resident[name] = (self._filter_code_key(plan, geo), ke, k)
         return ke
 
     def load_pipeline(self, pipeline: CodedPipeline,
@@ -247,35 +259,39 @@ class FcdccCluster:
         if pipeline.n != self.n:
             raise ValueError(f"pipeline targets n={pipeline.n}, cluster has n={self.n}")
         # replacing a model drops ALL of its old entries first: a v2 with
-        # fewer layers must not leave v1 filters reachable under the name
+        # fewer layers must not leave v1 filters reachable under the name.
+        # The whole swap runs under the registry lock so the engine never
+        # observes a model with v1 filters gone but v2 not yet resident.
         prefix = f"{name}/"
-        for stale in [k for k in self._resident if k.startswith(prefix)]:
-            del self._resident[stale]
-        impl = self._pool_impl()
-        impl.drop_filters(prefix)
-        self.pipelines[name] = pipeline
-        for spec, ke in zip(pipeline.specs, pipeline.coded_filters):
-            key = self._filter_code_key(spec.plan, spec.geo)
-            self._resident[f"{name}/{spec.name}"] = (key, ke, pipeline)
-            # device pool: scatter the filter shards to their workers now,
-            # at load time — the paper's pre-stored deployment — so the
-            # serving hot path never pays the placement
-            impl.resident_filters(f"{name}/{spec.name}", ke)
+        with self._registry_lock:
+            for stale in [k for k in self._resident if k.startswith(prefix)]:
+                del self._resident[stale]
+            impl = self._pool_impl()
+            impl.drop_filters(prefix)
+            self.pipelines[name] = pipeline
+            for spec, ke in zip(pipeline.specs, pipeline.coded_filters):
+                key = self._filter_code_key(spec.plan, spec.geo)
+                self._resident[f"{name}/{spec.name}"] = (key, ke, pipeline)
+                # device pool: scatter the filter shards to their workers
+                # now, at load time — the paper's pre-stored deployment — so
+                # the serving hot path never pays the placement
+                impl.resident_filters(f"{name}/{spec.name}", ke)
 
     def unload_pipeline(self, name: str) -> None:
         """Evict model ``name``: its pipeline registration, resident
         filters, and (device pool) per-device filter shards.  Jitted worker
         programs stay cached — they are keyed by program signature, shared
         across models, and a re-registration would re-trace them anyway."""
-        if name not in self.pipelines:
-            raise ValueError(
-                f"unknown model {name!r}; loaded: {sorted(self.pipelines)}"
-            )
-        del self.pipelines[name]
-        prefix = f"{name}/"
-        for stale in [k for k in self._resident if k.startswith(prefix)]:
-            del self._resident[stale]
-        self._pool_impl().drop_filters(prefix)
+        with self._registry_lock:
+            if name not in self.pipelines:
+                raise ValueError(
+                    f"unknown model {name!r}; loaded: {sorted(self.pipelines)}"
+                )
+            del self.pipelines[name]
+            prefix = f"{name}/"
+            for stale in [k for k in self._resident if k.startswith(prefix)]:
+                del self._resident[stale]
+            self._pool_impl().drop_filters(prefix)
 
     @property
     def pipeline(self) -> CodedPipeline | None:
@@ -395,7 +411,8 @@ class FcdccCluster:
                 raise ValueError("need k, coded_filters, or resident layer_name")
             ke = jax.block_until_ready(layer.encode_filters(k))
             if layer_name is not None:
-                self._resident[layer_name] = (code_key, ke, k)
+                with self._registry_lock:
+                    self._resident[layer_name] = (code_key, ke, k)
         t_encode = time.perf_counter() - t0
 
         impl = self._pool_impl()
@@ -410,8 +427,9 @@ class FcdccCluster:
         # would execute a whole discarded subtask, not a cache no-op)
         wkey = (self.pool,) + pkey + (tuple(xe.shape), tuple(_ke_of(ke, 0).shape))
         if wkey not in self._warmed:
-            impl.warm(fn, xe, ke)
-            self._warmed.add(wkey)
+            impl.warm(fn, xe, ke)  # outside the lock: warm may compile
+            with self._registry_lock:
+                self._warmed.add(wkey)
 
         pending = impl.submit(fn, xe, ke)
         results, worker_times, t_compute = self.collect(pending, delta)
@@ -480,8 +498,9 @@ class FcdccCluster:
         wkey = (self.pool, spec.program_key, tuple(xe.shape),
                 tuple(_ke_of(ke, 0).shape))
         if wkey not in self._warmed:
-            impl.warm(fn, xe, ke)
-            self._warmed.add(wkey)
+            impl.warm(fn, xe, ke)  # outside the lock: warm may compile
+            with self._registry_lock:
+                self._warmed.add(wkey)
         results, worker_times, t_compute = self.collect(
             impl.submit(fn, xe, ke), delta
         )

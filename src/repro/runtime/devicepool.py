@@ -88,8 +88,8 @@ class PendingBatch:
     result will eventually appear."""
 
     futures: dict
-    results: dict
-    worker_times: list
+    results: dict  # guarded-by: self.lock
+    worker_times: list  # guarded-by: single-writer-slots
     t_start: float
     expected: set | None = None
     lock: threading.Lock | None = None
@@ -142,21 +142,26 @@ class ThreadWorkerPool:
         self.n = n
         self.straggler = straggler
         self.mode = mode
-        self._pools: list[ThreadPoolExecutor] | None = None
+        # lazy create (first submit) vs shutdown swap race from another
+        # thread: both transitions go through the lock
+        self._lifecycle_lock = threading.Lock()
+        self._pools: list[ThreadPoolExecutor] | None = None  # guarded-by: self._lifecycle_lock
 
     # -- lifecycle ---------------------------------------------------------
     def _ensure_pools(self) -> list[ThreadPoolExecutor]:
-        if self._pools is None:
-            self._pools = [
-                ThreadPoolExecutor(
-                    max_workers=1, thread_name_prefix=f"fcdcc-worker-{i}"
-                )
-                for i in range(self.n)
-            ]
-        return self._pools
+        with self._lifecycle_lock:
+            if self._pools is None:
+                self._pools = [
+                    ThreadPoolExecutor(
+                        max_workers=1, thread_name_prefix=f"fcdcc-worker-{i}"
+                    )
+                    for i in range(self.n)
+                ]
+            return self._pools
 
     def shutdown(self) -> None:
-        pools, self._pools = self._pools, None
+        with self._lifecycle_lock:
+            pools, self._pools = self._pools, None
         if pools:
             for ex in pools:
                 ex.shutdown(wait=False, cancel_futures=True)
@@ -264,13 +269,16 @@ class DeviceWorkerPool:
         # per-(program key, device) jit cache: a separate jax.jit object per
         # device keeps trace accounting per device (one shared jit would
         # pool every device's specializations in one opaque cache), so the
+        # engine thread (hot path get-or-create) and caller threads
+        # (load/unload placement) share these registries
+        self._state_lock = threading.RLock()
         # bounded-program contract can be asserted device by device
-        self._programs: dict[tuple, object] = {}
+        self._programs: dict[tuple, object] = {}  # guarded-by: self._state_lock
         # resident filter shards: name -> (master ke ref, [per-device shard])
         # — keyed by the cluster's namespaced layer name, invalidated by
         # master-array identity so re-encoded filters are re-placed
-        self._filters: dict[str, tuple] = {}
-        self._timers: set[threading.Timer] = set()
+        self._filters: dict[str, tuple] = {}  # guarded-by: self._state_lock
+        self._timers: set[threading.Timer] = set()  # guarded-by: self._timer_lock
         self._timer_lock = threading.Lock()
 
     # -- lifecycle ---------------------------------------------------------
@@ -281,22 +289,26 @@ class DeviceWorkerPool:
             timers, self._timers = set(self._timers), set()
         for t in timers:
             t.cancel()
-        self._programs.clear()
-        self._filters.clear()
+        with self._state_lock:
+            self._programs.clear()
+            self._filters.clear()
 
     # -- program/filter placement ------------------------------------------
     def program(self, key: tuple, raw, i: int, jit_cache: dict = None):
         dev = self.devices[i]
-        fn = self._programs.get((key, dev))
-        if fn is None:
-            fn = self._programs[(key, dev)] = jax.jit(raw)
-        return fn
+        with self._state_lock:
+            fn = self._programs.get((key, dev))
+            if fn is None:
+                fn = self._programs[(key, dev)] = jax.jit(raw)
+            return fn
 
     def program_traces(self) -> dict:
         """Per-device jit-trace counts ``{device: traces}`` — the device
         pool's half of the bounded-program contract."""
         out: dict = {}
-        for (_, dev), fn in self._programs.items():
+        with self._state_lock:
+            programs = dict(self._programs)
+        for (_, dev), fn in programs.items():
             out[dev] = out.get(dev, 0) + fn._cache_size()
         return out
 
@@ -304,18 +316,20 @@ class DeviceWorkerPool:
         """The per-device shard list for coded filters ``ke`` under the
         namespaced layer ``name`` — placed once (the paper's pre-stored
         filters), reused until ``ke`` is a different array."""
-        ent = self._filters.get(name)
-        if ent is None or ent[0] is not ke:
-            shards = [jax.device_put(ke[i], self.devices[i])
-                      for i in range(self.n)]
-            for s in shards:
-                s.block_until_ready()
-            ent = self._filters[name] = (ke, shards)
-        return ent[1]
+        with self._state_lock:
+            ent = self._filters.get(name)
+            if ent is None or ent[0] is not ke:
+                shards = [jax.device_put(ke[i], self.devices[i])
+                          for i in range(self.n)]
+                for s in shards:
+                    s.block_until_ready()
+                ent = self._filters[name] = (ke, shards)
+            return ent[1]
 
     def drop_filters(self, prefix: str) -> None:
-        for name in [k for k in self._filters if k.startswith(prefix)]:
-            del self._filters[name]
+        with self._state_lock:
+            for name in [k for k in self._filters if k.startswith(prefix)]:
+                del self._filters[name]
 
     def gather(self, arr):
         """One surviving shard to the master device (decode gathers only

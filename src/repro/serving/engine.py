@@ -84,7 +84,8 @@ class _ModelState:
 
     name: str
     cluster: FcdccCluster
-    prepared: tuple | None = None  # direct-mode survivor plan, built lazily
+    # direct-mode survivor plan, built lazily  # guarded-by: engine-thread
+    prepared: tuple | None = None
 
     @property
     def pipeline(self) -> CodedPipeline:
@@ -120,13 +121,16 @@ class CodedServer:
         self._straggler = straggler
         self._default_buckets = bucket_sizes
         self._default_max_inflight = max_inflight
-        self.models: dict[str, _ModelState] = {}
+        # registry writes (register/unregister from caller threads) go
+        # through the lock; the engine thread only reads via ``.get``
+        self._registry_lock = threading.Lock()
+        self.models: dict[str, _ModelState] = {}  # guarded-by: self._registry_lock
         self.scheduler = MultiScheduler()
         self.metrics = MetricsCollector()
         self._poll_interval_s = poll_interval_s
         self._stop = threading.Event()
-        self._drain = True
-        self._thread: threading.Thread | None = None
+        self._drain = True  # guarded-by: control-thread
+        self._thread: threading.Thread | None = None  # guarded-by: control-thread
         if pipeline is not None:
             self.register_model(model, pipeline)
 
@@ -234,7 +238,8 @@ class CodedServer:
         # and the serving state exists — the engine loop resolves work it
         # picked through ``self.models``/the cluster, so a model it can
         # pick must already be fully registered
-        self.models[name] = _ModelState(name, self.cluster)
+        with self._registry_lock:
+            self.models[name] = _ModelState(name, self.cluster)
         self.scheduler.add_model(
             name, pipeline.pad_to_bucket, max_batch=pipeline.max_batch,
             max_inflight=(max_inflight if max_inflight is not None
@@ -281,7 +286,8 @@ class CodedServer:
             sched.cancel_all(  # to-cancel window must not be stranded
                 RuntimeError(f"model {name!r} unregistered"))
         self.scheduler.remove_model(name)
-        del self.models[name]
+        with self._registry_lock:
+            del self.models[name]
         self.cluster.unload_pipeline(name)
 
     def model_names(self) -> list[str]:

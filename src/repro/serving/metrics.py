@@ -88,8 +88,8 @@ class MetricsCollector:
 
     def __init__(self):
         self._lock = threading.Lock()
-        self._records: list[RequestRecord] = []
-        self._coalesced: dict[str, int] = {}
+        self._records: list[RequestRecord] = []  # guarded-by: self._lock
+        self._coalesced: dict[str, int] = {}  # guarded-by: self._lock
 
     def record(self, rec: RequestRecord) -> None:
         with self._lock:

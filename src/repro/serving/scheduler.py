@@ -60,10 +60,11 @@ class Request:
     x: jnp.ndarray
     arrival_t: float
     done: threading.Event = dataclasses.field(default_factory=threading.Event)
-    result: object = None
-    error: BaseException | None = None
-    start_t: float = float("nan")   # set when its batch starts layer 0
-    finish_t: float = float("nan")
+    result: object = None  # guarded-by: self._finish_lock
+    error: BaseException | None = None  # guarded-by: self._finish_lock
+    # set when its batch starts layer 0  # guarded-by: engine-thread
+    start_t: float = float("nan")
+    finish_t: float = float("nan")  # guarded-by: self._finish_lock
     _finish_lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False
     )
@@ -127,7 +128,7 @@ class RequestQueue:
         self.not_empty = (threading.Condition(threading.RLock())
                           if not_empty is None else not_empty)
         self._lock = self.not_empty
-        self._queue: list[Request] = []
+        self._queue: list[Request] = []  # guarded-by: self._lock
         self._ids = itertools.count() if ids is None else ids
 
     def submit(self, x: jnp.ndarray) -> RequestHandle:
@@ -192,7 +193,7 @@ class Scheduler:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.name = name
         self.queue = queue if queue is not None else RequestQueue()
-        self.inflight: list[ScheduledBatch] = []
+        self.inflight: list[ScheduledBatch] = []  # guarded-by: self._lock
         # guards ``inflight``: normally only the engine thread mutates it,
         # but a shutdown whose join timed out calls ``cancel_all`` from the
         # caller thread while the engine may still be running
@@ -204,19 +205,24 @@ class Scheduler:
         # ``closed`` rejects NEW submits while queued + in-flight work
         # drains; ``fenced`` additionally stops admission/coalescing — after
         # the fence the model's ``pad_to_bucket``/bucket bindings are never
-        # consulted again, so the pipeline behind them can be torn down
-        self.closed = False
-        self.fenced = False
+        # consulted again, so the pipeline behind them can be torn down.
+        # Writes go through ``_lock`` so a close/fence from the caller
+        # thread is a proper release/acquire edge against the engine's
+        # reads (a plain unfenced bool write has no ordering guarantee).
+        self.closed = False  # guarded-by: self._lock
+        self.fenced = False  # guarded-by: self._lock
 
     def close(self) -> None:
         """Phase 1 of removal: reject new submits, keep serving what's in."""
-        self.closed = True
+        with self._lock:
+            self.closed = True
 
     def fence(self) -> None:
         """Phase 2 of removal: stop consulting this model's bucket bindings
         entirely (implies ``close``).  Idempotent."""
-        self.closed = True
-        self.fenced = True
+        with self._lock:
+            self.closed = True
+            self.fenced = True
 
     def submit(self, x: jnp.ndarray) -> RequestHandle:
         if self.closed:
@@ -363,15 +369,17 @@ class MultiScheduler:
     def __init__(self):
         self.not_empty = threading.Condition(threading.RLock())
         self._ids = itertools.count()
-        self.schedulers: dict[str, Scheduler] = {}
+        self.schedulers: dict[str, Scheduler] = {}  # guarded-by: self.not_empty
         # integer fair-share weights: a model gets up to ``weight``
         # consecutive rounds per sweep position
-        self.weights: dict[str, int] = {}
+        self.weights: dict[str, int] = {}  # guarded-by: self.not_empty
         # accounting only (stats/tests): layer-rounds granted per model
-        self.served_rounds: dict[str, int] = {}
-        self._admit_rr = 0
-        self._pick_rr = 0
-        self._pick_credit = 0  # rounds granted at the current sweep position
+        self.served_rounds: dict[str, int] = {}  # guarded-by: self.not_empty
+        # sweep cursors: only the engine thread advances these
+        self._admit_rr = 0  # guarded-by: engine-thread
+        self._pick_rr = 0  # guarded-by: engine-thread
+        # rounds granted at the current sweep position
+        self._pick_credit = 0  # guarded-by: engine-thread
 
     def add_model(self, name: str, pad_to_bucket: Callable, *,
                   max_batch: int, max_inflight: int = 2,
@@ -476,8 +484,12 @@ class MultiScheduler:
                 if self._pick_credit >= self.weights.get(name, 1):
                     self._pick_rr = (pos + 1) % len(names)
                     self._pick_credit = 0
-                if name in self.served_rounds:
-                    self.served_rounds[name] += 1
+                # under the condition: ``remove_model`` may pop the entry
+                # from another thread between the membership check and the
+                # increment, resurrecting the key with a stale count
+                with self.not_empty:
+                    if name in self.served_rounds:
+                        self.served_rounds[name] += 1
                 return name, batch
         return None
 

@@ -1,0 +1,35 @@
+"""Clean concurrency fixture — the lint must report nothing here."""
+
+import threading
+
+
+class Tidy:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.items = []  # guarded-by: self._lock
+        self._thread = None  # guarded-by: control-thread
+        self.cv = threading.Condition(threading.RLock())
+        self.ready = False  # guarded-by: self.cv
+
+    def push(self, v):
+        with self._lock:
+            self.items.append(v)
+
+    def signal(self):
+        with self.cv:
+            self.ready = True
+            self.cv.notify_all()
+
+    def await_ready(self):
+        with self.cv:
+            while not self.ready:
+                self.cv.wait(0.05)
+
+    def start(self):
+        self._thread = threading.Thread(target=lambda: None, daemon=True)
+        self._thread.start()
+
+    def stop(self):
+        if self._thread is not None:
+            self._thread.join(timeout=1.0)
+            self._thread = None

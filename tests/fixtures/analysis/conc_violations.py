@@ -1,0 +1,124 @@
+"""Seeded concurrency violations — every lint rule must fire on this file.
+
+NOT importable production code: this module exists only as input for
+``repro.analysis.concurrency`` in ``tests/test_analysis.py``.  Each class
+isolates one rule so the tests can assert rule -> location precisely.
+"""
+
+import threading
+
+_G_LOCK = threading.Lock()
+_G_STATE = {}  # guarded-by: _G_LOCK
+
+
+def bad_global_write():
+    global _G_STATE
+    _G_STATE = {"reset": True}  # CONC-GUARD: no lock held
+
+
+class GuardViolation:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.items = []  # guarded-by: self._lock
+        self.count = 0  # guarded-by: self._lock
+
+    def ok(self):
+        with self._lock:
+            self.items.append(1)
+            self.count += 1
+
+    def bad(self):
+        self.items.append(2)  # CONC-GUARD
+        self.count = 5  # CONC-GUARD
+
+    def suppressed(self):
+        self.count = 9  # analysis: allow(CONC-GUARD)
+
+
+class UnknownGuard:
+    def __init__(self):
+        self.value = 0  # guarded-by: self._no_such_lock  # CONC-GUARD-UNKNOWN
+
+
+class SelfDeadlock:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def relock(self):
+        with self._lock:
+            with self._lock:  # CONC-SELF-DEADLOCK
+                pass
+
+    def _acquires(self):
+        with self._lock:
+            pass
+
+    def relock_via_call(self):
+        with self._lock:
+            self._acquires()  # CONC-SELF-DEADLOCK (interprocedural)
+
+
+class ReentrantOk:
+    def __init__(self):
+        self._lock = threading.RLock()
+
+    def relock(self):
+        with self._lock:
+            with self._lock:  # fine: reentrant
+                pass
+
+
+class OrderCycle:
+    def __init__(self):
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+
+    def ab(self):
+        with self._a:
+            with self._b:
+                pass
+
+    def ba(self):
+        with self._b:
+            with self._a:  # CONC-ORDER: cycle _a -> _b -> _a
+                pass
+
+
+class WaitWithoutLoop:
+    def __init__(self):
+        self.cv = threading.Condition(threading.RLock())
+        self.evt = threading.Event()
+        self.ready = False
+
+    def bad_wait(self):
+        with self.cv:
+            self.cv.wait()  # CONC-WAIT-LOOP
+
+    def good_wait(self):
+        with self.cv:
+            while not self.ready:
+                self.cv.wait(0.1)
+
+    def event_wait_is_fine(self):
+        self.evt.wait(1.0)  # level-triggered: exempt
+
+
+class LeakedThreads:
+    def start(self):  # CONC-THREAD-LIFECYCLE: no join/shutdown anywhere
+        t = threading.Thread(target=lambda: None, daemon=True)
+        t.start()
+
+
+class InterprocHeld:
+    """Private helper mutating under the caller's lock: must NOT flag."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.state = {}  # guarded-by: self._lock
+
+    def _apply(self, k, v):
+        self.state[k] = v  # every caller holds the lock
+
+    def put(self, k, v):
+        with self._lock:
+            self._apply(k, v)

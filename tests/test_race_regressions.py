@@ -1,0 +1,145 @@
+"""Regression tests for the race fixes that rode along with the
+concurrency lint (each corresponds to a lock added/mutation wrapped in
+serving/ or runtime/).
+
+These are stress-style tests: before the fixes they could fail (or fail
+intermittently under load); after, the asserted invariants are
+deterministic — identity of lazily-created singletons, absence of
+resurrected accounting keys, absence of exceptions racing create vs
+shutdown.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.runtime.cluster import FcdccCluster
+from repro.runtime.devicepool import StragglerModel, ThreadWorkerPool
+from repro.serving.scheduler import MultiScheduler, Scheduler
+
+
+def _pad_identity(x):
+    return x, int(x.shape[0])
+
+
+def _hammer(threads):
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30.0)
+    assert not any(t.is_alive() for t in threads)
+
+
+def test_cluster_pool_created_once_under_contention():
+    """FcdccCluster._pool_impl: the lazy pool build is now locked — every
+    thread must observe the SAME pool object (previously two threads could
+    each build a pool; one leaked with its executors)."""
+    from repro.core.fcdcc import FcdccPlan
+
+    cluster = FcdccCluster(FcdccPlan(n=4, k_a=2, k_b=2),
+                           StragglerModel.none(4), mode="simulated")
+    got = []
+    barrier = threading.Barrier(8)
+
+    def grab():
+        barrier.wait(timeout=10.0)
+        got.append(cluster._pool_impl())
+
+    _hammer([threading.Thread(target=grab) for _ in range(8)])
+    assert len({id(p) for p in got}) == 1
+    cluster.shutdown()
+
+
+def test_thread_pool_create_vs_shutdown_race():
+    """ThreadWorkerPool: racing _ensure_pools against shutdown must never
+    raise, and the final shutdown must leave no executor behind."""
+    pool = ThreadWorkerPool(4, StragglerModel.none(4), mode="threads")
+    errors = []
+
+    def churn():
+        try:
+            for _ in range(50):
+                pool._ensure_pools()
+                pool.shutdown()
+        except Exception as e:  # pragma: no cover - the regression
+            errors.append(e)
+
+    _hammer([threading.Thread(target=churn) for _ in range(4)])
+    pool.shutdown()
+    assert not errors
+    assert pool._pools is None
+
+
+def test_multischeduler_served_rounds_not_resurrected():
+    """MultiScheduler.next_batch accounting: the served_rounds increment
+    now happens under the condition, so a concurrent remove_model can
+    never resurrect the removed model's counter."""
+    ms = MultiScheduler()
+    x = np.zeros((3, 8, 8), np.float32)
+    stop = threading.Event()
+
+    def engine():
+        while not stop.is_set():
+            ms.admit()
+            picked = ms.next_batch()
+            if picked is not None:
+                name, batch = picked
+                ms.retire(name, batch)
+
+    t = threading.Thread(target=engine, daemon=True)
+    t.start()
+    try:
+        for round_i in range(30):
+            name = f"m{round_i}"
+            sched = ms.add_model(name, _pad_identity, max_batch=4)
+            for _ in range(3):
+                sched.submit(x)
+            sched.cancel_all(RuntimeError("test teardown"))
+            ms.remove_model(name)
+            assert name not in ms.served_rounds, (
+                f"removed model {name!r} resurrected in served_rounds"
+            )
+    finally:
+        stop.set()
+        t.join(timeout=10.0)
+    assert not t.is_alive()
+
+
+def test_scheduler_close_fence_concurrent_idempotent():
+    """Scheduler.close/fence now write under the lock; concurrent callers
+    stay idempotent and a submit after close always refuses."""
+    sched = Scheduler(_pad_identity, max_batch=4, name="m")
+    barrier = threading.Barrier(6)
+
+    def closer():
+        barrier.wait(timeout=10.0)
+        sched.close()
+        sched.fence()
+
+    _hammer([threading.Thread(target=closer) for _ in range(6)])
+    assert sched.closed and sched.fenced
+    with pytest.raises(RuntimeError):
+        sched.submit(np.zeros((3, 8, 8), np.float32))
+
+
+def test_device_pool_program_identity_under_contention():
+    """DeviceWorkerPool.program: concurrent get-or-create for the same
+    (key, device) must return one jit object (per-device trace accounting
+    depends on it)."""
+    from repro.runtime.devicepool import DeviceWorkerPool
+
+    pool = DeviceWorkerPool(2, StragglerModel.none(2))
+    got = []
+    barrier = threading.Barrier(8)
+
+    def grab(i):
+        barrier.wait(timeout=10.0)
+        got.append(pool.program(("k",), lambda a: a + 1, i % 2))
+
+    _hammer([threading.Thread(target=grab, args=(i,)) for i in range(8)])
+    per_dev = {}
+    for i, fn in enumerate(got):
+        per_dev.setdefault(pool.devices[i % 2], set()).add(id(fn))
+    assert all(len(s) == 1 for s in per_dev.values())
+    pool.shutdown()
