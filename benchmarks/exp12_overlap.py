@@ -1,0 +1,308 @@
+"""Experiment 12 (beyond paper): overlapped serving rounds + perf ledger.
+
+Measures the round-pipelining window of the ``CodedServer`` engine: with
+``pipeline_depth >= 2`` the engine dispatches batch B's coded worker round
+*before* collecting batch A's, so the master-side collect + decode of one
+batch overlaps another batch's worker compute — and, on the device pool,
+the straggler delays of consecutive rounds elapse concurrently instead of
+back to back.
+
+The sweep drives Poisson request arrivals at one resident CNN pipeline on
+the device-resident worker pool (8 emulated host devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``, set at module top
+when run as a script) under a *staggered* fixed-straggler model: the
+``delta``-th fastest worker carries a ``delay_s`` critical path, every
+slower worker is delayed further — so the fastest-``delta`` survivor
+subset is deterministic and each round's wall time is dominated by the
+injected delay that depth >= 2 can overlap.  Per depth in {1, 2, 4} it
+reports images/s, e2e p50/p95/p99, and the engine's measured
+``overlap_efficiency`` (serial phase seconds per busy wall second: ~1.0
+at depth 1, > 1.0 exactly when rounds overlapped).
+
+Correctness gates, run single-shot on EVERY attempt (never retried):
+
+  * **bit-parity** — with forced survivors (workers ``delta..n-1``
+    delayed) the outputs served at depth 2 and depth 4 are bit-identical
+    fp32 to depth 1's, and all match the undistributed ``pipeline.run``
+    within fp32 tolerance.  Pipelining reorders *scheduling*, never math.
+  * **bounded-program contract** — the per-depth pipelines trace the same
+    worker program count: a deeper window must not add jit traces.
+
+The perf trajectory persists in ``BENCH_serving.json`` at the repo root
+(committed): a plain run appends one dated run with per-cell
+``{d1_img_per_s, d2_img_per_s, d4_img_per_s, speedup_d2, ...}``.
+``--smoke`` is the CI gate and is read-only: it asserts (a) depth-2
+aggregate throughput >= depth-1 under the staggered fixed-straggler model
+(best of 3 — the parity gates above re-run and must pass on every
+attempt), and (b) the fresh depth-2 speedup of every cell is no worse
+than 10% below the last committed run for that cell.
+
+  PYTHONPATH=src python -m benchmarks.exp12_overlap          # append
+  PYTHONPATH=src python -m benchmarks.exp12_overlap --smoke  # CI gate
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+# Must precede jax's backend init: 8 emulated host devices when run as a
+# script on a CPU box.  When imported by benchmarks.run, jax is already
+# initialized and this is a no-op (run() then skips if single-device).
+if "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8"
+        ).strip()
+
+import jax
+import numpy as np
+
+from repro.core.pipeline import build_cnn_pipeline
+from repro.models.cnn import CNN_SPECS, init_cnn, input_hw
+from repro.runtime import StragglerModel
+from repro.serving import CodedServer
+
+from .common import emit
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_serving.json")
+REGRESSION_TOL = 0.9  # fresh speedup must stay >= 0.9x the committed one
+DEPTHS = (1, 2, 4)
+
+
+def load_bench(path: str = BENCH_PATH) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        return {"schema": 1, "runs": []}
+
+
+def committed_speedups(bench: dict) -> dict:
+    """Per-cell depth-2-vs-depth-1 speedup of the most recent committed
+    run that measured the cell."""
+    out = {}
+    for run_ in bench["runs"]:
+        for cell, rec in run_.get("cells", {}).items():
+            out[cell] = rec["speedup_d2"]
+    return out
+
+
+def _pipe(arch: str, n: int, kab, buckets):
+    params = init_cnn(arch, jax.random.PRNGKey(0))
+    return build_cnn_pipeline(arch, params, n, default_kab=kab,
+                              input_hw=input_hw(arch, smoke=True),
+                              bucket_sizes=buckets)
+
+
+def _staggered(n: int, dm: int, delay_s: float) -> StragglerModel:
+    """Deterministic-survivor straggler model whose critical path is the
+    injected delay: the first ``dm - 1`` workers answer instantly, worker
+    ``dm - 1`` carries ``delay_s`` (so every round *waits* that long for
+    its delta-th shard), and the rest trail at >= 2.5x with a stagger so
+    reaps never tie.  Survivors are always ``{0..dm-1}``."""
+    delays = np.zeros(n)
+    delays[dm - 1] = delay_s
+    delays[dm:] = delay_s * (2.5 + 0.5 * np.arange(n - dm))
+    return StragglerModel(delays)
+
+
+def _server(pipe, straggler, depth: int, buckets) -> CodedServer:
+    server = CodedServer(pipe, straggler, mode="threads", pool="device",
+                         bucket_sizes=buckets, pipeline_depth=depth)
+    server.warmup()
+    return server
+
+
+def _serve(server: CodedServer, xs, rate_hz: float, rng):
+    """Poisson open-loop arrivals; returns (ServingStats, OverlapStats,
+    outputs in submit order)."""
+    gaps = rng.exponential(1.0 / rate_hz, size=len(xs))
+    with server:
+        handles = []
+        for x, gap in zip(xs, gaps):
+            handles.append(server.submit(x))
+            time.sleep(gap)
+        outs = [np.asarray(h.result(timeout=300.0)) for h in handles]
+        stats = server.stats()
+        ostats = server.metrics.overlap_stats()
+    return stats, ostats, outs
+
+
+def check_parity(arch: str, n: int, kab, buckets, rng,
+                 requests: int = 6) -> None:
+    """Forced-survivor bit-parity across pipeline depths (single-shot).
+
+    Workers ``delta..n-1`` get a finite 0.25s delay, so every round of
+    every depth decodes from the identical shard subset — the outputs
+    served at depth 2 and 4 must be bit-identical fp32 to depth 1's, and
+    all must match the undistributed pipeline within fp32 tolerance."""
+    ref_pipe = _pipe(arch, n, kab, buckets)
+    dm = max(spec.plan.delta for spec in ref_pipe.specs)
+    delays = np.zeros(n)
+    delays[dm:] = 0.25
+    straggler = StragglerModel(delays)
+    c0 = ref_pipe.specs[0].geo.in_channels
+    hw0 = input_hw(arch, smoke=True)
+    xs = [np.asarray(v, np.float32)
+          for v in rng.standard_normal((requests, c0, hw0, hw0))]
+    outs = {}
+    for depth in DEPTHS:
+        server = _server(_pipe(arch, n, kab, buckets), straggler, depth,
+                         buckets)
+        with server:
+            handles = server.submit_many(xs)
+            outs[depth] = [np.asarray(h.result(timeout=300.0))
+                           for h in handles]
+    for depth in DEPTHS[1:]:
+        for i, (a, b) in enumerate(zip(outs[1], outs[depth])):
+            if not np.array_equal(a, b):
+                raise SystemExit(
+                    f"{arch}: request {i} served at depth {depth} is not "
+                    f"bit-identical to depth 1 under forced survivors")
+    for i, x in enumerate(xs):
+        ref = np.asarray(ref_pipe.run(x[None]))[0]
+        np.testing.assert_allclose(outs[1][i], ref, rtol=1e-4, atol=1e-4)
+
+
+def time_arch(arch: str, n: int, kab, buckets, requests: int,
+              rate_hz: float, delay_s: float, rng):
+    """One throughput/latency cell per depth under the staggered
+    fixed-straggler model; asserts the bounded-program contract (equal
+    worker trace counts across depths) on the way."""
+    probe = _pipe(arch, n, kab, buckets)
+    dm = max(spec.plan.delta for spec in probe.specs)
+    straggler = _staggered(n, dm, delay_s)
+    c0 = probe.specs[0].geo.in_channels
+    hw0 = input_hw(arch, smoke=True)
+    xs = [np.asarray(v, np.float32)
+          for v in rng.standard_normal((requests, c0, hw0, hw0))]
+    by_depth, traces = {}, {}
+    for depth in DEPTHS:
+        pipe = _pipe(arch, n, kab, buckets)
+        server = _server(pipe, straggler, depth, buckets)
+        stats, ostats, _ = _serve(server, xs, rate_hz, rng)
+        by_depth[depth] = (stats, ostats)
+        traces[depth] = pipe.worker_program_traces
+    if len(set(traces.values())) != 1:
+        raise SystemExit(
+            f"{arch}: pipeline depth changed the worker trace count "
+            f"(no-new-traces contract): {traces}")
+    return by_depth
+
+
+def run(quick: bool = True, smoke: bool = False, update: bool = True,
+        requests: int | None = None, rate_hz: float = 400.0):
+    ndev = len(jax.devices())
+    if ndev < 2:
+        msg = ("exp12 needs a multi-device host; set XLA_FLAGS="
+               "--xla_force_host_platform_device_count=8 (or run as "
+               "`python -m benchmarks.exp12_overlap`, which sets it)")
+        if smoke:
+            raise SystemExit(msg)
+        print(f"# exp12 skipped: {msg}", flush=True)
+        return {}
+    archs = ("lenet5",) if quick else ("lenet5", "alexnet")
+    n, kab = 8, (2, 4)
+    buckets = (1,)  # one request per round: max rounds, max overlap surface
+    requests = requests or (12 if quick else 24)
+    delay_s = 0.03 if quick else 0.05
+    rng = np.random.default_rng(0)
+    prior = committed_speedups(load_bench())
+    cells, regressions, failures = {}, [], []
+    for arch in archs:
+        # Best-of-3 on the PERF gate only: a loaded single-core CI box can
+        # lose the overlap race to scheduler jitter.  Parity + the trace
+        # bound are re-checked single-shot on every attempt — a wrong
+        # result must never be retried away.
+        best = None
+        for attempt in range(3 if smoke else 1):
+            check_parity(arch, n, kab, buckets, rng)
+            by_depth = time_arch(arch, n, kab, buckets, requests, rate_hz,
+                                 delay_s, rng)
+            ips = {d: s.images_per_s for d, (s, _) in by_depth.items()}
+            speedup_d2 = ips[2] / ips[1]
+            if best is None or speedup_d2 > best[0]:
+                best = (speedup_d2, by_depth)
+            if speedup_d2 >= 1.0:
+                break
+            print(f"# exp12/{arch}: depth-2 speedup {speedup_d2:.2f}x < 1.0 "
+                  f"on attempt {attempt + 1}, retrying", flush=True)
+        speedup_d2, by_depth = best
+        cell = f"{arch}/stagger"
+        rec = {"speedup_d2": round(speedup_d2, 3)}
+        for depth, (stats, ostats) in by_depth.items():
+            rec[f"d{depth}_img_per_s"] = round(stats.images_per_s, 1)
+            rec[f"d{depth}_e2e_p50_ms"] = round(stats.e2e_p50_s * 1e3, 1)
+            emit(
+                f"exp12/{cell}/d{depth}", 1.0 / stats.images_per_s,
+                f"img_per_s={stats.images_per_s:.1f} "
+                f"p50={stats.e2e_p50_s*1e3:.1f}ms "
+                f"p95={stats.e2e_p95_s*1e3:.1f}ms "
+                f"p99={stats.e2e_p99_s*1e3:.1f}ms "
+                f"overlap_eff={ostats.overlap_efficiency:.2f} "
+                f"max_depth={ostats.max_depth}",
+            )
+        emit(f"exp12/{cell}/speedup", 0.0,
+             f"d2_vs_d1={speedup_d2:.2f}x "
+             f"d4_vs_d1={by_depth[4][0].images_per_s / by_depth[1][0].images_per_s:.2f}x")
+        cells[cell] = rec
+        if speedup_d2 < 1.0:
+            failures.append((cell, round(speedup_d2, 3)))
+        committed = prior.get(cell)
+        if committed and speedup_d2 < REGRESSION_TOL * committed:
+            regressions.append((cell, round(speedup_d2, 3), committed))
+    if smoke:
+        if failures:
+            raise SystemExit(
+                f"depth-2 round pipelining did not beat depth-1 throughput "
+                f"under the staggered straggler model (best of 3): "
+                f"{failures}")
+        if regressions:
+            raise SystemExit(
+                "pipelined-serving perf regressed >10% vs the committed "
+                f"BENCH trajectory (cell, now, committed): {regressions}")
+        return cells
+    if update:
+        bench = load_bench()
+        bench["runs"].append({
+            "date": time.strftime("%Y-%m-%d"),
+            "backend": jax.default_backend(),
+            "devices": ndev,
+            "quick": quick,
+            "requests": requests,
+            "rate_hz": rate_hz,
+            "delay_s": delay_s,
+            "cells": cells,
+        })
+        tmp = f"{BENCH_PATH}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(bench, f, indent=1, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, BENCH_PATH)
+    return cells
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="lenet5 + alexnet, more requests")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: depth-2 >= depth-1 aggregate throughput "
+                         "under the staggered fixed-straggler model, forced-"
+                         "survivor bit-parity across depths, equal trace "
+                         "counts, and no >10%% regression vs "
+                         "BENCH_serving.json (read-only)")
+    ap.add_argument("--no-update", action="store_true",
+                    help="measure + print only; don't append to the ledger")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--rate-hz", type=float, default=400.0)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=not args.full, smoke=args.smoke, update=not args.no_update,
+        requests=args.requests, rate_hz=args.rate_hz)

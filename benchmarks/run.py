@@ -14,7 +14,7 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sizes (slow)")
-    ap.add_argument("--only", default=None, help="comma list: exp1..exp11,roofline")
+    ap.add_argument("--only", default=None, help="comma list: exp1..exp12,roofline")
     ap.add_argument("--batch", type=int, default=4,
                     help="batch size for the coded-pipeline sections (exp1/exp4)")
     args = ap.parse_args()
@@ -33,6 +33,7 @@ def main() -> None:
         exp9_fused_transitions,
         exp10_kernel_roofline,
         exp11_device_pool,
+        exp12_overlap,
         roofline_report,
     )
 
@@ -48,6 +49,7 @@ def main() -> None:
         "exp9": exp9_fused_transitions.run,
         "exp10": exp10_kernel_roofline.run,
         "exp11": exp11_device_pool.run,
+        "exp12": exp12_overlap.run,
         "roofline": roofline_report.run,
     }
     print("name,us_per_call,derived")

@@ -28,7 +28,12 @@
 # the single-device main run above) and the device-pool smoke benchmark
 # (exp11, asserts the device pool's aggregate throughput >= the thread
 # pool's with forced-subset bit-parity and no >10% regression vs the
-# committed BENCH_devices.json trajectory).
+# committed BENCH_devices.json trajectory), and the overlapped-serving
+# smoke benchmark (exp12, asserts depth-2 round pipelining >= depth-1
+# aggregate throughput under a staggered fixed-straggler Poisson cell,
+# with single-shot forced-survivor bit-parity across depths 1/2/4, equal
+# worker trace counts per depth, and no >10% regression vs the committed
+# BENCH_serving.json trajectory).
 # Extra args are passed through to the main pytest run.
 #
 # Tests run with a per-test watchdog (tests/conftest.py, REPRO_TEST_TIMEOUT
@@ -64,3 +69,4 @@ python -m benchmarks.exp10_kernel_roofline --smoke
 export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
 python -m pytest -x -q tests/test_device_pool.py
 python -m benchmarks.exp11_device_pool --smoke
+python -m benchmarks.exp12_overlap --smoke

@@ -93,7 +93,7 @@ def build_cnn_server(archs, *, workers: int, stragglers: int,
                      straggler_delay: float, smoke: bool, kab=(2, 4),
                      mode: str = "threads", seed: int = 0,
                      fuse_transitions: bool = False,
-                     pool: str | None = None):
+                     pool: str | None = None, pipeline_depth: int = 2):
     """One multi-model ``CodedServer``: every arch's pipeline resident on
     the same n-worker pool (its own scheduler/buckets per model).
     ``fuse_transitions`` serves on the partition-resident path (batches
@@ -102,7 +102,9 @@ def build_cnn_server(archs, *, workers: int, stragglers: int,
     each coded worker to its own ``jax.Device`` (real accelerators, or CPU
     host devices under ``XLA_FLAGS=--xla_force_host_platform_device_
     count=N``), ``"threads"`` keeps the per-worker thread executors, and
-    None auto-selects the device pool on multi-device hosts."""
+    None auto-selects the device pool on multi-device hosts.
+    ``pipeline_depth`` is the round-pipelining window: how many dispatched
+    worker rounds may be in flight at once (1 = serial dispatch->collect)."""
     from repro.core.pipeline import build_cnn_pipeline
     from repro.models.cnn import init_cnn, input_hw
     from repro.runtime import StragglerModel
@@ -112,7 +114,8 @@ def build_cnn_server(archs, *, workers: int, stragglers: int,
     straggler = StragglerModel.fixed(workers, stragglers, straggler_delay,
                                      seed=seed)
     server = CodedServer(straggler=straggler, mode=mode,
-                         bucket_sizes=(1, 2, 4, 8), pool=pool)
+                         bucket_sizes=(1, 2, 4, 8), pool=pool,
+                         pipeline_depth=pipeline_depth)
     for arch in archs:
         params = init_cnn(arch, jax.random.PRNGKey(0))
         server.register_model(arch, build_cnn_pipeline(
@@ -128,7 +131,7 @@ def serve_cnn(archs, *, requests: int, workers: int, stragglers: int,
               mode: str = "threads", seed: int = 0,
               http_port: int | None = None,
               fuse_transitions: bool = False,
-              pool: str | None = None):
+              pool: str | None = None, pipeline_depth: int = 2):
     """Serve one or several CNN archs from one shared coded worker pool.
 
     Without ``--http-port``: fire ``requests`` concurrent single-image
@@ -145,6 +148,7 @@ def serve_cnn(archs, *, requests: int, workers: int, stragglers: int,
         archs, workers=workers, stragglers=stragglers,
         straggler_delay=straggler_delay, smoke=smoke, kab=kab, mode=mode,
         seed=seed, fuse_transitions=fuse_transitions, pool=pool,
+        pipeline_depth=pipeline_depth,
     )
     server.warmup()
 
@@ -238,6 +242,10 @@ def main():
                     help="partition-resident layer transitions: batches "
                          "advance between ConvLs as coded partition shares "
                          "(CNN only)")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="round-pipelining window: dispatched worker rounds "
+                         "in flight at once (1 = serial dispatch->collect; "
+                         "CNN only)")
     args = ap.parse_args()
     archs = args.arch or ["qwen3-4b"]
     if all(a in CNN_SPECS for a in archs):
@@ -246,7 +254,8 @@ def main():
                   straggler_delay=args.straggler_delay, smoke=args.smoke,
                   mode=args.mode, http_port=args.http_port,
                   fuse_transitions=args.fuse_transitions,
-                  pool=None if args.pool == "auto" else args.pool)
+                  pool=None if args.pool == "auto" else args.pool,
+                  pipeline_depth=args.pipeline_depth)
         return
     if len(archs) > 1 or args.http_port is not None or args.fuse_transitions:
         raise SystemExit(

@@ -3,6 +3,7 @@ from .cluster import (
     FcdccCluster,
     LayerTiming,
     PendingBatch,
+    PendingRound,
     StragglerModel,
     run_layer_elastic,
 )

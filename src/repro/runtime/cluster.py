@@ -99,6 +99,24 @@ class LayerTiming:
         return [t for t in self.worker_compute_s if np.isfinite(t)]
 
 
+@dataclasses.dataclass
+class PendingRound:
+    """One dispatched pipeline-layer round awaiting its collect half.
+
+    Returned by ``dispatch_pipeline_layer`` and consumed by
+    ``collect_pipeline_layer``/``round_ready``.  It captures everything the
+    collect half needs — the pipeline object itself, not its registry name
+    — so finishing an in-flight round stays safe even if the model is
+    unregistered (``unload_pipeline``) between dispatch and collect."""
+
+    idx: int
+    pipe: CodedPipeline
+    spec: object  # the layer's LayerProgramSpec
+    pending: PendingBatch
+    t_encode: float
+    fused_mid: bool  # fused pipeline, non-final layer: transition, no decode
+
+
 class FcdccCluster:
     """n workers executing coded conv subtasks behind the pool seam.
 
@@ -343,16 +361,23 @@ class FcdccCluster:
         mistaken for the fastest one."""
         return self._pool_impl().submit(lambda i: compute_one, xe, ke)
 
-    def collect(self, pending: PendingBatch, delta: int):
+    def collect(self, pending: PendingBatch, delta: int, *,
+                block: bool = True):
         """Reap the fastest ``delta`` results of a ``submit``; returns
         ``(results, worker_times, t_compute)``.  Later arrivals are
         discarded, exactly like the paper's asynchronous collection —
         straggler subtasks are never joined (their own node stays busy
         finishing them, nobody waits).  ``worker_times`` is a snapshot:
         stragglers finishing after return write into the live list, not
-        the one handed back."""
-        results, worker_times, t_compute = \
-            self._pool_impl().collect(pending, delta)
+        the one handed back.
+
+        ``block=False`` is the reaper form: return ``None`` immediately
+        when the round is not ready yet (the serving engine uses this to
+        reap whichever of several in-flight rounds finishes first)."""
+        impl = self._pool_impl()
+        if not block and not impl.ready(pending, delta):
+            return None
+        results, worker_times, t_compute = impl.collect(pending, delta)
         if len(results) < delta:
             raise ClusterDegraded(
                 f"only {len(results)} of delta={delta} results; "
@@ -442,33 +467,21 @@ class FcdccCluster:
                               layer_name or "")
 
     # -- whole network ------------------------------------------------------
-    def run_pipeline_layer(self, idx: int, x, model: str | None = None) -> tuple:
-        """One ConvL of a loaded pipeline as a full master/worker round:
-        encode inputs, dispatch n coded subtasks against the *resident*
-        coded filters, keep the fastest delta, decode + relu + pool.
-        Returns ``(y, LayerTiming)`` for the batched ``(B, C, H, W)`` input.
+    def dispatch_pipeline_layer(self, idx: int, x,
+                                model: str | None = None) -> PendingRound:
+        """The send half of one pipeline-layer round: encode the batched
+        input (or adopt the previous fused round's coded shares), warm the
+        worker program on first sight of these shapes, and async-dispatch
+        the n coded subtasks.  Returns a ``PendingRound`` for
+        ``round_ready``/``collect_pipeline_layer``.
 
-        This is the layer-granular step the serving engine interleaves
-        across concurrent request batches — of all registered models —
-        (``repro.serving.CodedServer`` admits new arrivals exactly at these
-        layer boundaries).  ``model`` selects the pipeline namespace.
-
-        With a ``fuse_transitions`` pipeline the state carried between
-        rounds is *partition-resident*: layer 0 takes the raw
-        ``(B, C, H, W)`` batch and encodes it; every non-final round
-        returns the next layer's coded input shares
-        ``(n, ell_a, B, C, h_hat, Wp)`` (the fastest-delta outputs are
-        decoded only to the partition grid, relu/pool run per partition
-        with halo exchange, and the re-encode targets all n workers so the
-        next round again keeps the fastest delta); only the final round
-        merges to the full tensor.  ``x`` for ``idx > 0`` must then be the
-        shares returned by the previous round.  The transition replaces the
-        separate encode step, so ``encode_s`` is folded into ``decode_s``
-        for those rounds.
-        """
+        The serving engine calls this for batch B *before* collecting
+        batch A, so A's master-side collect/decode/transition overlaps B's
+        worker compute (round pipelining).  Dispatch order is the only
+        thing pipelining changes — each round's arithmetic (and therefore
+        its fp32 bits, for a given survivor subset) is untouched."""
         pipe = self.get_pipeline(model)
         spec = pipe.specs[idx]
-        delta = spec.plan.delta
         fused = pipe.fuse_transitions
         last = idx == len(pipe.specs) - 1
         # the pipeline's own filters, not the name-keyed store: a later
@@ -501,30 +514,73 @@ class FcdccCluster:
             impl.warm(fn, xe, ke)  # outside the lock: warm may compile
             with self._registry_lock:
                 self._warmed.add(wkey)
-        results, worker_times, t_compute = self.collect(
-            impl.submit(fn, xe, ke), delta
-        )
+        pending = impl.submit(fn, xe, ke)
+        return PendingRound(idx, pipe, spec, pending, t_encode,
+                            fused_mid=fused and not last)
+
+    def round_ready(self, rnd: PendingRound) -> bool:
+        """Non-blocking: would ``collect_pipeline_layer(rnd)`` return
+        without waiting on the pool?"""
+        return self._pool_impl().ready(rnd.pending, rnd.spec.plan.delta)
+
+    def collect_pipeline_layer(self, rnd: PendingRound) -> tuple:
+        """The reap half: keep the fastest delta of the dispatched round,
+        then decode + relu + pool (or the fused partition-resident
+        transition).  Returns ``(y, LayerTiming)``."""
+        pipe, spec = rnd.pipe, rnd.spec
+        delta = spec.plan.delta
+        results, worker_times, t_compute = self.collect(rnd.pending, delta)
 
         ids, outs = self._gather_outs(results, delta)
         t2 = time.perf_counter()
-        if fused and not last:
+        if rnd.fused_mid:
             # partition-resident transition straight into the next layer's
             # coded shares for ALL n workers (the next collect again keeps
             # whichever delta finish first); the all-n encode columns are a
             # per-layer constant resident on device
-            d = jnp.asarray(pipe.decode_matrix(idx, tuple(ids)))
+            d = jnp.asarray(pipe.decode_matrix(rnd.idx, tuple(ids)))
             y = jax.block_until_ready(
-                pipe.transition_fn(idx)(
-                    outs, d, pipe.encode_columns_all(idx + 1),
+                pipe.transition_fn(rnd.idx)(
+                    outs, d, pipe.encode_columns_all(rnd.idx + 1),
                 )
             )
         else:
             y = jax.block_until_ready(
-                pipe.decoder(idx, tuple(ids))(outs)
+                pipe.decoder(rnd.idx, tuple(ids))(outs)
             )
         t_decode = time.perf_counter() - t2
-        return y, LayerTiming(t_encode, t_compute, t_decode, worker_times,
+        return y, LayerTiming(rnd.t_encode, t_compute, t_decode, worker_times,
                               ids, spec.name)
+
+    def run_pipeline_layer(self, idx: int, x, model: str | None = None) -> tuple:
+        """One ConvL of a loaded pipeline as a full master/worker round:
+        encode inputs, dispatch n coded subtasks against the *resident*
+        coded filters, keep the fastest delta, decode + relu + pool.
+        Returns ``(y, LayerTiming)`` for the batched ``(B, C, H, W)`` input.
+
+        This is the layer-granular step the serving engine interleaves
+        across concurrent request batches — of all registered models —
+        (``repro.serving.CodedServer`` admits new arrivals exactly at these
+        layer boundaries, and with ``pipeline_depth > 1`` keeps several
+        such rounds in flight via the dispatch/collect halves above).
+        ``model`` selects the pipeline namespace.
+
+        With a ``fuse_transitions`` pipeline the state carried between
+        rounds is *partition-resident*: layer 0 takes the raw
+        ``(B, C, H, W)`` batch and encodes it; every non-final round
+        returns the next layer's coded input shares
+        ``(n, ell_a, B, C, h_hat, Wp)`` (the fastest-delta outputs are
+        decoded only to the partition grid, relu/pool run per partition
+        with halo exchange, and the re-encode targets all n workers so the
+        next round again keeps the fastest delta); only the final round
+        merges to the full tensor.  ``x`` for ``idx > 0`` must then be the
+        shares returned by the previous round.  The transition replaces the
+        separate encode step, so ``encode_s`` is folded into ``decode_s``
+        for those rounds.
+        """
+        return self.collect_pipeline_layer(
+            self.dispatch_pipeline_layer(idx, x, model)
+        )
 
     def run_pipeline(self, x, pipeline: CodedPipeline | None = None,
                      model: str | None = None) -> tuple:

@@ -27,6 +27,16 @@ master/worker round:
     unchanged on the device pool; with zero delays the variance you measure
     is the real per-device one.
 
+Both pools expose a non-blocking ``ready(pending, delta)`` next to the
+blocking ``collect``: the serving engine keeps several master/worker
+rounds in flight (round pipelining) and reaps whichever finishes first
+instead of FIFO-blocking on the oldest.  ``ready`` never mutates the
+pending batch — a True just means the immediately following ``collect``
+will return without waiting.  The device pool's collect polls with
+exponential backoff (``_POLL_MIN`` up to ``_POLL_MAX``, reset on
+progress) so a master blocked on a long worker round stops burning a
+core; pass an explicit ``poll_interval_s`` for a fixed period (tests).
+
 Both pools share the ``PendingBatch`` in-flight handle and the
 inf = dead / nan = discarded / finite = measured ``worker_times``
 convention, so ``LayerTiming`` semantics are pool-independent.
@@ -221,6 +231,18 @@ class ThreadWorkerPool:
                     results[i] = out
         return PendingBatch(futures, results, worker_times, t_start)
 
+    def ready(self, pending: PendingBatch, delta: int) -> bool:
+        """Non-blocking: would ``collect`` return without waiting?  True
+        once delta subtasks finished cleanly — or once *every* future is
+        done (possibly with failures), so a degraded round reports ready
+        and lets ``collect`` raise ``ClusterDegraded`` instead of the
+        engine polling it forever."""
+        if self.mode != "threads":
+            return True  # simulated: results were computed at submit time
+        done = [f for f in pending.futures.values() if f.done()]
+        ok = sum(1 for f in done if f.exception() is None)
+        return ok >= delta or len(done) == len(pending.futures)
+
     def collect(self, pending: PendingBatch, delta: int):
         results = dict(pending.results)
         if self.mode == "threads":
@@ -254,8 +276,15 @@ class DeviceWorkerPool:
 
     kind = "device"
 
+    # adaptive collect-poll bounds: start near the old fixed 50µs period
+    # (well under one subtask), back off exponentially toward 1ms while
+    # nothing lands so a master parked on a long worker round stops
+    # burning a core, reset on every reaped result
+    _POLL_MIN = 5e-6
+    _POLL_MAX = 1e-3
+
     def __init__(self, n: int, straggler: StragglerModel, *, devices=None,
-                 mesh=None, poll_interval_s: float = 50e-6):
+                 mesh=None, poll_interval_s: float | None = None):
         from repro.launch.mesh import make_worker_mesh
         from repro.sharding import worker_devices
 
@@ -265,6 +294,8 @@ class DeviceWorkerPool:
         self.devices = worker_devices(self.mesh, n)  # len n (round-robin)
         # decode runs on the master device: where the default jit places it
         self.master = jax.devices()[0]
+        # None = adaptive exponential backoff; a number = fixed period
+        # (kept as the deterministic override for tests)
         self._poll_interval_s = poll_interval_s
         # per-(program key, device) jit cache: a separate jax.jit object per
         # device keeps trace accounting per device (one shared jit would
@@ -393,13 +424,24 @@ class DeviceWorkerPool:
             self._timers.add(timer)
         timer.start()
 
+    def ready(self, pending: PendingBatch, delta: int) -> bool:
+        """Non-blocking: are ``delta`` (or all expected, for degraded
+        rounds) results resident and ready to reap right now?"""
+        need = min(delta, len(pending.expected))
+        with pending.lock:
+            avail = list(pending.results.values())
+        return sum(1 for a in avail if a.is_ready()) >= need
+
     def collect(self, pending: PendingBatch, delta: int):
         """Poll per-array readiness until the fastest ``delta`` devices have
         delivered; later arrivals are discarded (their device finishes the
         subtask, naturally backpressuring its own next dispatch, but the
-        array is never gathered)."""
+        array is never gathered).  The poll period backs off exponentially
+        while no result lands and resets on progress (or stays fixed when
+        an explicit ``poll_interval_s`` was given)."""
         need = min(delta, len(pending.expected))
         reaped: dict[int, object] = {}
+        sleep_s = self._POLL_MIN
         while len(reaped) < need:
             with pending.lock:
                 avail = {i: a for i, a in pending.results.items()
@@ -415,8 +457,13 @@ class DeviceWorkerPool:
                         break
             if len(reaped) >= need:
                 break
-            if not progressed:
+            if progressed:
+                sleep_s = self._POLL_MIN
+            elif self._poll_interval_s is not None:
                 time.sleep(self._poll_interval_s)
+            else:
+                time.sleep(sleep_s)
+                sleep_s = min(sleep_s * 2, self._POLL_MAX)
         t_compute = time.perf_counter() - pending.t_start
         return reaped, list(pending.worker_times), t_compute
 

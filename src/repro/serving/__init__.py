@@ -3,7 +3,13 @@
 metrics + stdlib HTTP front-end."""
 from .engine import CodedServer
 from .frontend import ServingFrontend
-from .metrics import MetricsCollector, RequestRecord, ServingStats, percentile
+from .metrics import (
+    MetricsCollector,
+    OverlapStats,
+    RequestRecord,
+    ServingStats,
+    percentile,
+)
 from .scheduler import (
     MultiScheduler,
     Request,
@@ -17,6 +23,7 @@ __all__ = [
     "CodedServer",
     "ServingFrontend",
     "MetricsCollector",
+    "OverlapStats",
     "RequestRecord",
     "ServingStats",
     "percentile",

@@ -61,9 +61,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pipeline import CodedPipeline, build_cnn_pipeline
-from repro.runtime import FcdccCluster, StragglerModel
+from repro.runtime import FcdccCluster, PendingRound, StragglerModel
 
-from .metrics import MetricsCollector, RequestRecord, ServingStats
+from .metrics import (MetricsCollector, OverlapStats, RequestRecord,
+                      ServingStats)
 from .scheduler import MultiScheduler, RequestHandle, ScheduledBatch
 
 __all__ = ["CodedServer"]
@@ -92,6 +93,18 @@ class _ModelState:
         return self.cluster.pipelines[self.name]
 
 
+@dataclasses.dataclass
+class _InFlightRound:
+    """One dispatched-but-uncollected worker round in the engine's pipeline
+    window.  Engine-private: only the engine thread creates, polls, and
+    consumes these.  # guarded-by: engine-thread"""
+
+    state: _ModelState
+    batch: ScheduledBatch
+    rnd: PendingRound
+    dispatch_s: float  # master-side encode + submit time for this round
+
+
 class CodedServer:
     """Continuous-batching inference server over resident coded pipelines.
 
@@ -106,11 +119,21 @@ class CodedServer:
                  straggler: StragglerModel | None = None, *,
                  mode: str = "simulated", execution: str = "cluster",
                  bucket_sizes=None, max_inflight: int = 2,
+                 pipeline_depth: int = 2,
                  poll_interval_s: float = 0.005, model: str = "default",
                  pool: str | None = None, devices=None):
         if execution not in ("cluster", "direct"):
             raise ValueError(f"unknown execution mode {execution!r}")
+        if not isinstance(pipeline_depth, int) or pipeline_depth < 1:
+            raise ValueError(
+                f"pipeline_depth must be an integer >= 1, got {pipeline_depth!r}"
+            )
         self.execution = execution
+        # round-pipelining window: how many dispatched worker rounds (of
+        # any model) may be in flight at once.  1 = the classic serial
+        # dispatch -> collect loop; 2+ overlaps batch A's collect + fused
+        # transition on the master with batch B's worker compute
+        self.pipeline_depth = pipeline_depth
         self.mode = mode
         self.cluster: FcdccCluster | None = None
         # worker-pool preference for the shared cluster ("threads"/"device"/
@@ -142,6 +165,7 @@ class CodedServer:
                  mode: str = "simulated", execution: str = "cluster",
                  backend: str = "lax", interpret: bool = True,
                  bucket_sizes=None, max_inflight: int = 2,
+                 pipeline_depth: int = 2,
                  model: str | None = None,
                  fuse_transitions: bool = False,
                  pool: str | None = None, devices=None) -> "CodedServer":
@@ -165,7 +189,7 @@ class CodedServer:
             pool=pool, devices=devices,
         )
         return cls(pipeline, straggler, mode=mode, execution=execution,
-                   max_inflight=max_inflight,
+                   max_inflight=max_inflight, pipeline_depth=pipeline_depth,
                    model=model if model is not None else name)
 
     # -- model registry ------------------------------------------------------
@@ -242,8 +266,12 @@ class CodedServer:
             self.models[name] = _ModelState(name, self.cluster)
         self.scheduler.add_model(
             name, pipeline.pad_to_bucket, max_batch=pipeline.max_batch,
+            # the default in-flight capacity grows with the pipeline window:
+            # fewer than ``pipeline_depth`` admissible batches could never
+            # fill the window, silently serializing the rounds again
             max_inflight=(max_inflight if max_inflight is not None
-                          else self._default_max_inflight),
+                          else max(self._default_max_inflight,
+                                   self.pipeline_depth)),
             weight=weight,
         )
 
@@ -424,11 +452,53 @@ class CodedServer:
     def per_model_stats(self) -> dict[str, ServingStats]:
         return self.metrics.per_model_stats()
 
+    def overlap_stats(self, model: str | None = None) -> OverlapStats:
+        """Per-phase round timings + pipelining efficiency (see
+        ``OverlapStats``) — all models, or one model's rounds."""
+        return self.metrics.overlap_stats(model)
+
+    def wait_many(self, handles, timeout: float | None = 60.0, *,
+                  slice_s: float = 0.05) -> bool:
+        """Block until every handle is done (True) or ``timeout`` elapses
+        (False — no request is cancelled, some may have finished).
+
+        One shared condition (``MultiScheduler.completion``) serves every
+        waiter with timeout-sliced waits, so a bounded pool of threads can
+        park on many pending requests at once — the HTTP front-end's
+        bounded handler pool gathers batched requests through here instead
+        of dedicating one blocked thread per ``result()`` call."""
+        deadline = (None if timeout is None
+                    else time.perf_counter() + float(timeout))
+        completion = self.scheduler.completion
+        with completion:
+            while True:
+                if all(h.done() for h in handles):
+                    return True
+                wait_s = slice_s
+                if deadline is not None:
+                    left = deadline - time.perf_counter()
+                    if left <= 0:
+                        return False
+                    wait_s = min(wait_s, left)
+                completion.wait(wait_s)
+
     # -- engine loop ---------------------------------------------------------
+    # reaper poll floor: first wait after a dispatch (backs off toward
+    # ``poll_interval_s`` while nothing lands, resets per reap)
+    _REAP_POLL_MIN_S = 50e-6
+
     def _engine_loop(self) -> None:
         sched = self.scheduler
+        # the pipeline window: dispatched-but-uncollected worker rounds,
+        # oldest first (collects happen in whatever order rounds finish)
+        rounds: list[_InFlightRound] = []  # guarded-by: engine-thread
+        busy_t0 = 0.0  # wall-clock start of the current busy span
         while True:
-            if self._stop.is_set() and (not self._drain or not sched.has_work()):
+            if self._stop.is_set() and (
+                not self._drain or (not rounds and not sched.has_work())
+            ):
+                # drain=False abandons in-flight rounds: their results are
+                # never gathered and cancel_all below fails their requests
                 break
             # layer boundary: admit late arrivals (all models, rotating)
             # until every queue is empty or every inflight slot is filled —
@@ -436,27 +506,136 @@ class CodedServer:
             # layer-round late
             while sched.admit() is not None:
                 pass
-            # re-pack equal-depth fragments into full buckets
+            # re-pack equal-depth fragments into full buckets (batches with
+            # a round in flight are skipped — their state is mid-round)
             for name, merges in sched.coalesce().items():
                 self.metrics.count_coalesced(name, merges)
-            picked = sched.next_batch()
-            if picked is None:
-                with sched.not_empty:
-                    if not sched.queued() and not self._stop.is_set():
-                        sched.not_empty.wait(self._poll_interval_s)
+            # dispatch phase: fill the window with fair-share picks, each
+            # pick one layer round, so batch B's workers start before
+            # batch A's collect
+            while len(rounds) < self.pipeline_depth:
+                picked = sched.next_batch()
+                if picked is None:
+                    break
+                name, batch = picked
+                state = self.models.get(name)
+                if state is None:  # unregistered between pick and dispatch:
+                    break          # its requests were cancelled by the
+                                   # fence; re-snapshot from the loop top
+                if not rounds:
+                    busy_t0 = time.perf_counter()
+                self._stamp_start(batch)
+                if self.execution == "direct":
+                    try:
+                        self._advance(state, batch)
+                    except Exception as err:  # degraded cluster etc.
+                        self._fail_batch(name, batch, err)
+                    break  # synchronous: back to admission, like depth 1
+                t0 = time.perf_counter()
+                try:
+                    rnd = self.cluster.dispatch_pipeline_layer(
+                        batch.layer_idx, batch.x, name
+                    )
+                except Exception as err:  # encode/submit failed
+                    self._fail_batch(name, batch, err)
+                    continue
+                batch.dispatched = True
+                rounds.append(_InFlightRound(
+                    state, batch, rnd, time.perf_counter() - t0
+                ))
+                self.metrics.note_depth(len(rounds))
+            if not rounds:
+                if not self._stop.is_set():
+                    with sched.not_empty:
+                        if not sched.queued() and not self._stop.is_set():
+                            sched.not_empty.wait(self._poll_interval_s)
                 continue
-            name, batch = picked
-            state = self.models.get(name)
-            if state is None:  # unregistered between pick and advance: its
-                continue       # requests were already cancelled by the fence
-            try:
-                self._advance(state, batch)
-            except Exception as err:  # degraded cluster etc: fail the batch
-                sched.retire(name, batch)
-                for req in batch.requests:
-                    req.finish(error=err)
+            ent = self._poll_rounds(
+                rounds, can_dispatch=len(rounds) < self.pipeline_depth
+            )
+            if ent is None:
+                continue  # new dispatchable work, or stop without drain
+            self._finish_round(ent)
+            if not rounds:
+                self.metrics.note_busy(time.perf_counter() - busy_t0)
         if not self._drain:
             self.scheduler.cancel_all(RuntimeError("server shut down"))
+
+    def _stamp_start(self, batch: ScheduledBatch) -> None:
+        """Queue-wait ends here: stamp ``start_t`` on every request seeing
+        its first dispatch (later rounds of the same batch, and rows merged
+        in by coalescing after their own first dispatch, keep theirs)."""
+        now = time.perf_counter()
+        for r in batch.requests:
+            if np.isnan(r.start_t):
+                r.start_t = now
+
+    def _fail_batch(self, name: str, batch: ScheduledBatch,
+                    err: BaseException) -> None:
+        self.scheduler.retire(name, batch)
+        for req in batch.requests:
+            req.finish(error=err)
+
+    def _poll_rounds(self, rounds: list, can_dispatch: bool):
+        """Reap whichever in-flight round is ready first (removed from
+        ``rounds`` and returned) — NOT FIFO: under mixed models/straggler
+        draws a younger round can land before an older one.  Returns None
+        to hand control back to the dispatch phase: a free window slot has
+        dispatchable work, or shutdown-without-drain sheds the window.
+        Waits on ``not_empty`` with exponential backoff so new submits
+        interrupt the sleep immediately."""
+        sched = self.scheduler
+        wait_s = self._REAP_POLL_MIN_S
+        while True:
+            for k, ent in enumerate(rounds):
+                if self.cluster.round_ready(ent.rnd):
+                    return rounds.pop(k)
+            if self._stop.is_set() and not self._drain:
+                return None
+            if can_dispatch and sched.dispatchable():
+                return None
+            with sched.not_empty:
+                sched.not_empty.wait(wait_s)
+            wait_s = min(wait_s * 2.0, self._poll_interval_s)
+
+    def _finish_round(self, ent: "_InFlightRound") -> None:
+        """The collect half of one pipelined round: gather + decode (or the
+        fused transition), advance the batch one boundary, account the
+        phase timings, and complete the batch when it ran its last layer.
+
+        Everything is resolved through the ``PendingRound`` (pipeline
+        captured at dispatch), so a model unregistered mid-flight still
+        finishes cleanly — its requests were already cancelled by the
+        fence, ``finish`` is first-writer-wins, and retire tolerates the
+        missing scheduler."""
+        state, batch, pipe = ent.state, ent.batch, ent.rnd.pipe
+        t0 = time.perf_counter()
+        try:
+            y, timing = self.cluster.collect_pipeline_layer(ent.rnd)
+        except Exception as err:  # degraded cluster etc: fail the batch
+            self._fail_batch(state.name, batch, err)
+            return
+        t_reap = time.perf_counter() - t0
+        batch.x = y
+        batch.timings.append(timing)
+        batch.layer_idx += 1
+        # partition-resident pipelines carry coded shares between rounds —
+        # the request batch sits on axis 2 of (n, ell_a, B, C, h_hat, Wp)
+        # until the final merge, and coalescing/padding must slice that axis
+        batch.batch_axis = (
+            2 if pipe.fuse_transitions
+            and 0 < batch.layer_idx < len(pipe.specs) else 0
+        )
+        batch.dispatched = False
+        self.metrics.record_phases(
+            state.name,
+            dispatch_s=ent.dispatch_s,
+            worker_s=timing.compute_s,
+            collect_s=max(t_reap - timing.decode_s, 0.0),
+            transition_s=timing.decode_s,
+        )
+        if batch.layer_idx >= len(pipe.specs):
+            self._complete(state, batch)
 
     def _advance(self, state: _ModelState, batch: ScheduledBatch) -> None:
         """Advance one batch — by one ConvL (cluster execution, so other

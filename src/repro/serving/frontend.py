@@ -1,37 +1,45 @@
 """Stdlib JSON/HTTP front-end for the multi-model ``CodedServer``.
 
-A ``ThreadingHTTPServer`` (one handler thread per connection, no third-party
-deps) in front of the engine:
+An HTTP server with a BOUNDED handler pool (no third-party deps) in front
+of the engine:
 
   * ``POST /v1/infer``  — body ``{"model": "...", "input": [[[...]]]}``
     (a nested-list ``(C, H, W)`` tensor; ``model`` optional while a single
-    model is registered).  The handler thread submits to the engine and
-    blocks on the request handle, so HTTP concurrency maps 1:1 onto engine
-    concurrency — concurrent posts land in the same continuous batches.
+    model is registered).  The handler submits to the engine and awaits the
+    result on the scheduler's ONE shared completion condition
+    (``CodedServer.wait_many``: timeout-sliced waits, no thread parked per
+    request Event), so HTTP concurrency maps onto engine concurrency —
+    concurrent posts land in the same continuous batches.  A request whose
+    result does not arrive within ``result_timeout_s`` answers **504**.
     Replies ``{"model", "request_id", "shape", "output", "latency_s"}``.
     Batched form: ``{"model": "...", "inputs": [t1, t2, ...]}`` submits
     every image in one round trip — all of them fan out to the engine
-    *before* the handler blocks, so they ride the same continuous batches
-    — and replies ``{"model", "count", "results": [...]}`` with one entry
-    per input in order: the single-image payload on success, or
-    ``{"error": "..."}`` for that item alone (one bad image never fails
-    its siblings; an engine that is down or draining is a request-level
-    503, same as the single form).
+    *before* the handler waits, then ONE ``wait_many`` covers the whole
+    list — and replies ``{"model", "count", "results": [...]}`` with one
+    entry per input in order: the single-image payload on success, or
+    ``{"error": "..."}`` for that item alone (one bad or timed-out image
+    never fails its siblings; an engine that is down or draining is a
+    request-level 503, same as the single form).
   * ``GET /v1/models``  — registered models with input shape/dtype, layer
     count and bucket sizes.
   * ``GET /v1/stats``   — aggregate + per-model ``ServingStats``.
 
+Connections are served by ``handler_pool`` pooled threads
+(``_PooledHTTPServer``) instead of one spawned thread per connection, so a
+burst of slow requests queues at the accept loop instead of growing an
+unbounded thread count.
+
 ``ServingFrontend`` owns the socket lifecycle: ``start()`` binds (an
 ephemeral port when ``port=0``) and serves from a background thread;
-``shutdown()`` drains gracefully — stop accepting, join the in-flight
-handler threads (each blocked on its engine result), then drain the engine
-itself (when the front-end owns it).  Wired into ``launch/serve.py`` via
-``--http-port``.
+``shutdown()`` drains gracefully — stop accepting, join the handler pool
+(every accepted request answered), then drain the engine itself (when the
+front-end owns it).  Wired into ``launch/serve.py`` via ``--http-port``.
 """
 from __future__ import annotations
 
 import json
 import threading
+from concurrent.futures import ThreadPoolExecutor
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 import numpy as np
@@ -46,6 +54,44 @@ def _stats_dict(stats) -> dict:
     # nan is not valid JSON; percentiles of an empty window become null
     return {k: (None if isinstance(v, float) and not np.isfinite(v) else v)
             for k, v in d.items()}
+
+
+def _overlap_dict(ov) -> dict:
+    # dataclass fields + the derived serial_s / overlap_efficiency
+    d = {**ov.__dict__, "serial_s": ov.serial_s,
+         "overlap_efficiency": ov.overlap_efficiency}
+    return {k: (None if isinstance(v, float) and not np.isfinite(v) else v)
+            for k, v in d.items()}
+
+
+class _PooledHTTPServer(ThreadingHTTPServer):
+    """``ThreadingHTTPServer`` serving connections from a BOUNDED pool.
+
+    The stock mixin spawns one thread per accepted connection — under a
+    burst of slow requests that grows without bound, and each thread parks
+    on its own ``Request.done`` event.  Here ``process_request`` hands the
+    connection to a fixed ``ThreadPoolExecutor`` instead: at most
+    ``pool_size`` requests are in service, later accepts queue in the
+    executor, and ``server_close`` joins the pool so graceful drain still
+    answers every accepted request before the engine goes away."""
+
+    def __init__(self, addr, handler, pool_size: int):
+        if pool_size < 1:
+            raise ValueError(f"pool_size must be >= 1, got {pool_size}")
+        super().__init__(addr, handler)
+        self._pool = ThreadPoolExecutor(
+            max_workers=pool_size, thread_name_prefix="coded-http"
+        )
+
+    def process_request(self, request, client_address) -> None:
+        # process_request_thread = finish_request + error handling +
+        # shutdown_request, exactly what the per-connection thread ran
+        self._pool.submit(self.process_request_thread, request,
+                          client_address)
+
+    def server_close(self) -> None:
+        super().server_close()
+        self._pool.shutdown(wait=True)
 
 
 class _Handler(BaseHTTPRequestHandler):
@@ -88,13 +134,14 @@ class _Handler(BaseHTTPRequestHandler):
                 })
             self._reply(200, {"models": models})
         elif self.path == "/v1/stats":
-            self._reply(200, {
-                "aggregate": _stats_dict(self.engine.stats()),
-                "per_model": {
-                    m: _stats_dict(s)
-                    for m, s in self.engine.per_model_stats().items()
-                },
-            })
+            agg = _stats_dict(self.engine.stats())
+            agg["overlap"] = _overlap_dict(self.engine.overlap_stats())
+            per_model = {}
+            for m, s in self.engine.per_model_stats().items():
+                per_model[m] = _stats_dict(s)
+                per_model[m]["overlap"] = _overlap_dict(
+                    self.engine.overlap_stats(m))
+            self._reply(200, {"aggregate": agg, "per_model": per_model})
         else:
             self._error(404, f"no route {self.path!r}")
 
@@ -145,16 +192,24 @@ class _Handler(BaseHTTPRequestHandler):
             except RuntimeError as err:  # engine not running / draining
                 self._error(503, str(err))
                 return
+            if not self.engine.wait_many([handle],
+                                         timeout=self.result_timeout_s):
+                # the request is NOT cancelled — the engine may still finish
+                # it — but this handler's slot is released with a timeout
+                self._error(504, f"request {handle.request_id} not done "
+                                 f"after {self.result_timeout_s}s")
+                return
             item = self._gather(handle)
             if "error" in item:
                 self._error(503, item["error"])
                 return
             self._reply(200, {"model": resolved, **item})
             return
-        # batched: fan every image out BEFORE blocking on any result, so
+        # batched: fan every image out BEFORE waiting on any result, so
         # the whole list rides the engine's continuous batches in one HTTP
-        # round trip; per-ITEM problems (bad tensor, wrong shape) are
-        # reported per item and never fail siblings, while engine-down is a
+        # round trip, then ONE shared-condition wait covers all of them;
+        # per-ITEM problems (bad tensor, wrong shape, timeout) are reported
+        # per item and never fail siblings, while engine-down is a
         # request-level condition and answers 503 like the single form
         handles = []
         for i, raw_x in enumerate(batch):
@@ -166,8 +221,18 @@ class _Handler(BaseHTTPRequestHandler):
             except RuntimeError as err:  # engine not running / draining
                 self._error(503, str(err))
                 return
-        results = [{"error": h} if isinstance(h, str) else self._gather(h)
-                   for h in handles]
+        self.engine.wait_many([h for h in handles if not isinstance(h, str)],
+                              timeout=self.result_timeout_s)
+        results = []
+        for h in handles:
+            if isinstance(h, str):
+                results.append({"error": h})
+            elif not h.done():
+                results.append({"error": f"TimeoutError: request "
+                                         f"{h.request_id} not done after "
+                                         f"{self.result_timeout_s}s"})
+            else:
+                results.append(self._gather(h))
         self._reply(200, {
             "model": resolved,
             "count": len(results),
@@ -175,9 +240,10 @@ class _Handler(BaseHTTPRequestHandler):
         })
 
     def _gather(self, handle) -> dict:
-        """Block for one engine result; the per-item reply payload."""
+        """The per-item reply payload for a handle ``wait_many`` already
+        saw complete (``result`` returns without blocking)."""
         try:
-            y = np.asarray(handle.result(timeout=self.result_timeout_s))
+            y = np.asarray(handle.result(timeout=0))
         except Exception as err:  # degraded cluster, engine shutdown, ...
             return {"error": f"{type(err).__name__}: {err}"}
         return {
@@ -199,17 +265,16 @@ class ServingFrontend:
 
     def __init__(self, engine: CodedServer, *, host: str = "127.0.0.1",
                  port: int = 0, manage_server: bool = True,
-                 result_timeout_s: float = 120.0):
+                 result_timeout_s: float = 120.0, handler_pool: int = 8):
         self.engine = engine
         self.manage_server = manage_server
         handler = type("Handler", (_Handler,), {
             "engine": engine, "result_timeout_s": result_timeout_s,
         })
-        self.httpd = ThreadingHTTPServer((host, port), handler)
-        # ThreadingHTTPServer defaults to daemon handler threads, which
-        # server_close() does NOT join — graceful drain needs every accepted
-        # request answered before the engine shuts down, so track them
-        self.httpd.daemon_threads = False
+        # bounded pool instead of a thread per connection; server_close()
+        # joins the pool, so graceful drain answers every accepted request
+        # before the engine shuts down
+        self.httpd = _PooledHTTPServer((host, port), handler, handler_pool)
         self._thread: threading.Thread | None = None
 
     @property
@@ -237,15 +302,15 @@ class ServingFrontend:
         return self
 
     def shutdown(self) -> None:
-        """Graceful drain: stop accepting, join in-flight handler threads
-        (each completes once the engine delivers its result), then drain
-        the engine (when managed).  Idempotent."""
+        """Graceful drain: stop accepting, join the handler pool (each
+        in-service request completes once the engine delivers — or times
+        out to a 504), then drain the engine (when managed).  Idempotent."""
         thread, self._thread = self._thread, None
         if thread is not None:
             self.httpd.shutdown()       # stop the accept loop
             thread.join(30.0)
-        # joins per-connection handler threads (block_on_close), so every
-        # accepted request gets its response before the engine goes away
+        # joins the bounded handler pool, so every accepted request gets
+        # its response before the engine goes away
         self.httpd.server_close()
         if self.manage_server and self.engine._thread is not None:
             self.engine.shutdown(drain=True)

@@ -18,7 +18,8 @@ from typing import Sequence
 
 import numpy as np
 
-__all__ = ["RequestRecord", "ServingStats", "MetricsCollector", "percentile"]
+__all__ = ["OverlapStats", "RequestRecord", "ServingStats",
+           "MetricsCollector", "percentile"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +82,40 @@ class ServingStats:
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class OverlapStats:
+    """Per-phase round timings under pipelined serving.
+
+    Each collected worker round contributes one (dispatch, worker, collect,
+    transition) tuple; ``busy_wall_s`` is the engine's wall time with at
+    least one round in flight.  ``overlap_efficiency`` is the observable
+    form of the pipelining win: serial phase seconds per busy wall second —
+    ~1.0 at depth 1 (phases ARE the wall), > 1.0 when master-side
+    collect/transition of one batch overlapped another batch's worker
+    compute."""
+
+    rounds: int            # collected worker rounds
+    dispatch_s: float      # sum: master-side encode + submit
+    worker_s: float        # sum: dispatch -> delta-th result visible
+    collect_s: float       # sum: reap + gather (decode excluded)
+    transition_s: float    # sum: decode or fused transition
+    busy_wall_s: float     # wall time with >= 1 round in flight
+    max_depth: int         # deepest pipeline window actually reached
+
+    @property
+    def serial_s(self) -> float:
+        """What the phases would cost executed back to back."""
+        return (self.dispatch_s + self.worker_s + self.collect_s
+                + self.transition_s)
+
+    @property
+    def overlap_efficiency(self) -> float:
+        """serial_s / busy_wall_s (nan before any busy span closes)."""
+        if self.busy_wall_s <= 0:
+            return float("nan")
+        return self.serial_s / self.busy_wall_s
+
+
 class MetricsCollector:
     """Thread-safe sink for ``RequestRecord``s (the engine thread writes,
     callers read a snapshot).  Records are tagged per model; ``stats``
@@ -90,6 +125,10 @@ class MetricsCollector:
         self._lock = threading.Lock()
         self._records: list[RequestRecord] = []  # guarded-by: self._lock
         self._coalesced: dict[str, int] = {}  # guarded-by: self._lock
+        # per-model round phase tuples (dispatch, worker, collect, transition)
+        self._phases: dict[str, list[tuple]] = {}  # guarded-by: self._lock
+        self._busy_wall_s: float = 0.0  # guarded-by: self._lock
+        self._max_depth: int = 0  # guarded-by: self._lock
 
     def record(self, rec: RequestRecord) -> None:
         with self._lock:
@@ -99,6 +138,43 @@ class MetricsCollector:
         """Account ``merges`` equal-depth batch merges to ``model``."""
         with self._lock:
             self._coalesced[model] = self._coalesced.get(model, 0) + merges
+
+    def record_phases(self, model: str, *, dispatch_s: float, worker_s: float,
+                      collect_s: float, transition_s: float) -> None:
+        """One collected worker round's phase breakdown (engine thread)."""
+        with self._lock:
+            self._phases.setdefault(model, []).append(
+                (dispatch_s, worker_s, collect_s, transition_s)
+            )
+
+    def note_busy(self, wall_s: float) -> None:
+        """Close one busy span: ``wall_s`` seconds with >= 1 round in
+        flight (the engine calls this when its window drains to empty)."""
+        with self._lock:
+            self._busy_wall_s += wall_s
+
+    def note_depth(self, depth: int) -> None:
+        """Track the deepest pipeline window observed."""
+        with self._lock:
+            if depth > self._max_depth:
+                self._max_depth = depth
+
+    def overlap_stats(self, model: str | None = None) -> OverlapStats:
+        """Aggregate ``OverlapStats`` — all models, or one model's rounds
+        (busy wall and max depth are engine-wide either way)."""
+        with self._lock:
+            if model is None:
+                phases = [p for ps in self._phases.values() for p in ps]
+            else:
+                phases = list(self._phases.get(model, []))
+            busy, depth = self._busy_wall_s, self._max_depth
+        sums = [sum(p[k] for p in phases) for k in range(4)] \
+            if phases else [0.0] * 4
+        return OverlapStats(
+            rounds=len(phases), dispatch_s=sums[0], worker_s=sums[1],
+            collect_s=sums[2], transition_s=sums[3],
+            busy_wall_s=busy, max_depth=depth,
+        )
 
     def records(self, model: str | None = None) -> list[RequestRecord]:
         with self._lock:
@@ -117,6 +193,9 @@ class MetricsCollector:
         with self._lock:
             self._records.clear()
             self._coalesced.clear()
+            self._phases.clear()
+            self._busy_wall_s = 0.0
+            self._max_depth = 0
 
     def coalesced(self, model: str | None = None) -> int:
         with self._lock:

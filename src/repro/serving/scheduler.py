@@ -62,11 +62,20 @@ class Request:
     done: threading.Event = dataclasses.field(default_factory=threading.Event)
     result: object = None  # guarded-by: self._finish_lock
     error: BaseException | None = None  # guarded-by: self._finish_lock
-    # set when its batch starts layer 0  # guarded-by: engine-thread
+    # set when its batch is first *dispatched* to the workers (queue-wait
+    # ends at dispatch, not collect — under round pipelining a batch can
+    # sit dispatched while an older round collects)  # guarded-by: engine-thread
     start_t: float = float("nan")
     finish_t: float = float("nan")  # guarded-by: self._finish_lock
     _finish_lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False
+    )
+    # shared completion condition (MultiScheduler.completion): notified on
+    # every finish so bounded waiter pools (``CodedServer.wait_many``, the
+    # HTTP front-end) can wait for many requests on ONE condition instead
+    # of parking a thread per request.  None for standalone queues.
+    completion: threading.Condition | None = dataclasses.field(
+        default=None, repr=False
     )
 
     def finish(self, result=None, error: BaseException | None = None) -> None:
@@ -80,6 +89,12 @@ class Request:
             self.error = error
             self.finish_t = time.perf_counter()
             self.done.set()
+        # outside _finish_lock: waiters re-check handle.done() themselves,
+        # and nesting the condition under the finish lock would order them
+        completion = self.completion
+        if completion is not None:
+            with completion:
+                completion.notify_all()
 
 
 class RequestHandle:
@@ -123,16 +138,19 @@ class RequestQueue:
     """
 
     def __init__(self, not_empty: threading.Condition | None = None,
-                 ids=None):
+                 ids=None, completion: threading.Condition | None = None):
         # reentrant: the engine holds the condition while checking len()
         self.not_empty = (threading.Condition(threading.RLock())
                           if not_empty is None else not_empty)
         self._lock = self.not_empty
         self._queue: list[Request] = []  # guarded-by: self._lock
         self._ids = itertools.count() if ids is None else ids
+        # handed to every Request: notified when it finishes (see Request)
+        self._completion = completion
 
     def submit(self, x: jnp.ndarray) -> RequestHandle:
-        req = Request(next(self._ids), x, time.perf_counter())
+        req = Request(next(self._ids), x, time.perf_counter(),
+                      completion=self._completion)
         with self.not_empty:
             self._queue.append(req)
             self.not_empty.notify_all()
@@ -171,6 +189,11 @@ class ScheduledBatch:
     # which axis of ``x`` is the request batch: 0 for raw/merged tensors,
     # 2 while carrying partition-resident coded shares between layers
     batch_axis: int = 0
+    # True while a worker round for this batch is in flight (dispatched but
+    # not collected): such a batch must not be picked again or coalesced —
+    # its ``x`` is stale until the round lands.  The engine thread flips it
+    # around dispatch/collect.  # guarded-by: engine-thread
+    dispatched: bool = False
 
     @property
     def real(self) -> int:
@@ -255,12 +278,26 @@ class Scheduler:
         assert real == len(reqs)
         batch = ScheduledBatch(reqs, x, bucket=int(x.shape[0]),
                                model=self.name)
-        now = time.perf_counter()
-        for r in reqs:
-            r.start_t = now
+        # start_t is NOT stamped here: queue-wait ends at the batch's first
+        # *dispatch* (the engine stamps it), so admitted-but-waiting time —
+        # e.g. behind a full pipeline window — still counts as queueing
         with self._lock:
             self.inflight.append(batch)
         return batch
+
+    def can_admit(self) -> bool:
+        """Non-mutating: would ``admit()`` assemble a batch right now?"""
+        if self.fenced:
+            return False
+        with self._lock:
+            if len(self.inflight) >= self.max_inflight:
+                return False
+        return len(self.queue) > 0
+
+    def has_undispatched(self) -> bool:
+        """Any in-flight batch waiting at a boundary (not mid-round)?"""
+        with self._lock:
+            return any(not b.dispatched for b in self.inflight)
 
     def coalesce(self) -> int:
         """Merge in-flight batches sitting at the SAME layer boundary into
@@ -283,6 +320,10 @@ class Scheduler:
         with self._lock:
             by_depth: dict[int, list[ScheduledBatch]] = {}
             for b in self.inflight:
+                if b.dispatched:
+                    # mid-round: its ``x`` is stale until the collect lands,
+                    # so only same-boundary batches NOT in flight merge
+                    continue
                 by_depth.setdefault(b.layer_idx, []).append(b)
             for group in by_depth.values():
                 group.sort(key=lambda b: b.real)
@@ -314,11 +355,14 @@ class Scheduler:
 
     def next_batch(self) -> ScheduledBatch | None:
         """Deepest-layer-first (FIFO among ties): drain nearly-finished
-        batches before starting fresh ones."""
+        batches before starting fresh ones.  Batches with a round already
+        in flight are skipped — they advance when their collect lands, not
+        by being picked again."""
         with self._lock:
-            if not self.inflight:
+            ready = [b for b in self.inflight if not b.dispatched]
+            if not ready:
                 return None
-            return max(self.inflight, key=lambda b: b.layer_idx)
+            return max(ready, key=lambda b: b.layer_idx)
 
     def retire(self, batch: ScheduledBatch) -> None:
         with self._lock:
@@ -368,6 +412,10 @@ class MultiScheduler:
 
     def __init__(self):
         self.not_empty = threading.Condition(threading.RLock())
+        # notified (by the finishing thread) whenever ANY request of any
+        # model completes: one condition serves every result waiter
+        # (``CodedServer.wait_many``, the HTTP front-end's bounded pool)
+        self.completion = threading.Condition()
         self._ids = itertools.count()
         self.schedulers: dict[str, Scheduler] = {}  # guarded-by: self.not_empty
         # integer fair-share weights: a model gets up to ``weight``
@@ -388,7 +436,8 @@ class MultiScheduler:
             raise ValueError(f"weight must be an integer >= 1, got {weight!r}")
         sched = Scheduler(
             pad_to_bucket, max_batch=max_batch, max_inflight=max_inflight,
-            name=name, queue=RequestQueue(self.not_empty, self._ids),
+            name=name,
+            queue=RequestQueue(self.not_empty, self._ids, self.completion),
         )
         # registry mutations serialize on ``not_empty``: the engine may be
         # registering/removing a model live while its loop snapshots names
@@ -434,6 +483,14 @@ class MultiScheduler:
 
     def queued(self) -> int:
         return sum(len(s.queue) for s in list(self.schedulers.values()))
+
+    def dispatchable(self) -> bool:
+        """Is there work the engine could dispatch *right now* — a queued
+        request that would admit, or an in-flight batch waiting at a
+        boundary?  The reaper polls this to abandon its wait when a free
+        pipeline-window slot could be filled instead."""
+        return any(s.can_admit() or s.has_undispatched()
+                   for s in list(self.schedulers.values()))
 
     def admit(self) -> ScheduledBatch | None:
         """Admit one new batch from the next model (rotating) that has both

@@ -14,6 +14,8 @@ device; dead-device elastic re-plan; the per-device bounded-program
 contract; resident filter placement; pool resolution rules; and serving
 through the device pool.
 """
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -254,3 +256,67 @@ def test_fused_transitions_on_device_pool():
     delayed = set(range(dm, N))
     for t in tt + td:
         assert not (set(t.used_workers) & delayed)
+
+
+# -- non-blocking readiness + adaptive collect backoff ---------------------
+def test_device_pool_round_ready_nonblocking():
+    """The dispatch/collect split on the device pool: ``round_ready`` is
+    False while the delta-th shard's deferred dispatch has not landed,
+    flips True without blocking, and ``collect(block=False)`` mirrors it."""
+    pipe = _pipe("lenet5")
+    dm = max(spec.plan.delta for spec in pipe.specs)
+    delays = np.full(N, 0.4)  # every dispatch deferred: nothing ready early
+    cluster = FcdccCluster(pipe.specs[0].plan, StragglerModel(delays),
+                           mode="threads", pool="device")
+    try:
+        cluster.load_pipeline(pipe)
+        x = np.asarray(RNG.standard_normal(_in_shape(pipe, 1)), np.float32)
+        rnd = cluster.dispatch_pipeline_layer(0, x)
+        assert not cluster.round_ready(rnd)
+        assert cluster.collect(rnd.pending, dm, block=False) is None
+        deadline = time.perf_counter() + 30.0
+        while not cluster.round_ready(rnd):
+            assert time.perf_counter() < deadline
+            time.sleep(0.01)
+        y, timing = cluster.collect_pipeline_layer(rnd)
+        assert len(timing.used_workers) == dm
+        refc = FcdccCluster(pipe.specs[0].plan, None, mode="threads")
+        try:
+            refc.load_pipeline(pipe)
+            ref, _ = refc.run_pipeline_layer(0, x)
+        finally:
+            refc.shutdown()
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   atol=1e-4)
+    finally:
+        cluster.shutdown()
+
+
+def test_device_pool_adaptive_poll_default_and_override():
+    """``poll_interval_s=None`` (the default) collects with the adaptive
+    5us..1ms backoff; an explicit value is kept verbatim as a fixed period
+    (the test override).  Both produce identical results."""
+    from repro.runtime.devicepool import DeviceWorkerPool
+
+    assert DeviceWorkerPool._POLL_MIN == pytest.approx(5e-6)
+    assert DeviceWorkerPool._POLL_MAX == pytest.approx(1e-3)
+    outs = {}
+    # forced fastest-delta subset: without it the reap race would pick
+    # different (all-correct) shard subsets per run and bits would differ
+    straggler, _ = _forced_subset_straggler(_pipe("lenet5"))
+    x = np.asarray(RNG.standard_normal(_in_shape(_pipe("lenet5"), 1)),
+                   np.float32)
+    for label, pool_kwargs in (("adaptive", {}),
+                               ("fixed", {"poll_interval_s": 5e-5})):
+        pipe = _pipe("lenet5")
+        impl = DeviceWorkerPool(N, straggler, **pool_kwargs)
+        try:
+            assert impl._poll_interval_s == pool_kwargs.get("poll_interval_s")
+            cluster = FcdccCluster(pipe.specs[0].plan, None, mode="threads",
+                                   pool="device")
+            cluster._pool_obj = impl  # inject before the lazy default build
+            cluster.load_pipeline(pipe)
+            outs[label] = np.asarray(cluster.run_pipeline(x)[0])
+        finally:
+            cluster.shutdown()
+    np.testing.assert_array_equal(outs["adaptive"], outs["fixed"])

@@ -1,0 +1,424 @@
+"""Round pipelining: multi-batch in-flight serving rounds.
+
+The engine keeps up to ``pipeline_depth`` dispatched-but-uncollected
+worker rounds in flight (dispatch batch B before collecting batch A) via
+the cluster's dispatch/collect split (``dispatch_pipeline_layer`` /
+``round_ready`` / ``collect_pipeline_layer``).
+
+Covers: the split's non-blocking ``ready``/``collect(block=False)`` seam;
+bit-identical fp32 parity between depth 1 and depths 2/4 for forced
+fastest-delta survivor subsets across {lax, pallas} x {fused, unfused};
+queue-wait ending at first *dispatch* (not admission); the window
+actually reaching depth 2 on late admission with an earlier round in
+flight; coalescing skipping mid-round batches; mid-flight cancellation
+(shutdown without drain, unregister with rounds in flight); and the
+shared-condition ``wait_many`` / HTTP 504 timeout path.
+"""
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CodedPipeline
+from repro.core.pipeline import plan_layers
+from repro.models.cnn import ConvL
+from repro.runtime import FcdccCluster, StragglerModel
+from repro.serving import CodedServer, Scheduler, ServingFrontend
+
+RNG = np.random.default_rng(7)
+N = 6
+
+STACK = [
+    ConvL("s1", 2, 8, 3, stride=1, padding=1, pool=2),
+    ConvL("s2", 8, 8, 3, padding=1),
+]
+
+STACK_B = [
+    ConvL("s1", 3, 8, 3, stride=1, padding=1, pool=2),
+    ConvL("s2", 8, 4, 3, padding=1),
+]
+
+
+def _params(layers, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        l.name: jnp.asarray(
+            rng.standard_normal((l.out_ch, l.in_ch, l.kernel, l.kernel))
+            * (l.in_ch * l.kernel**2) ** -0.5,
+            jnp.float32,
+        )
+        for l in layers
+    }
+
+
+def _pipeline(bucket_sizes=(2,), n=N, hw=12, backend="lax", fused=False,
+              layers=STACK, seed=0):
+    params = _params(layers, seed=seed)
+    specs = plan_layers(layers, hw, n, default_kab=(2, 4))
+    return CodedPipeline(specs, params, bucket_sizes=bucket_sizes,
+                         backend=backend, fuse_transitions=fused)
+
+
+def _images(count, ch=2, hw=12):
+    return [jnp.asarray(RNG.standard_normal((ch, hw, hw)), jnp.float32)
+            for _ in range(count)]
+
+
+def _forced_survivors(pipe, n=N, delay=0.1):
+    """Finite delays on workers delta..n-1: every round of every depth
+    keeps exactly the undelayed subset, so decodes are bit-identical."""
+    dm = max(spec.plan.delta for spec in pipe.specs)
+    delays = np.zeros(n)
+    delays[dm:] = delay
+    return StragglerModel(delays), dm
+
+
+# -- the dispatch/collect split (cluster seam) -----------------------------
+def test_dispatch_collect_split_nonblocking_ready():
+    """``dispatch_pipeline_layer`` returns a pending round whose readiness
+    is observable without blocking, and ``collect(block=False)`` returns
+    None while fewer than delta shards are in."""
+    pipe = _pipeline()
+    delays = np.full(N, 0.3)  # every worker sleeps: nothing ready at first
+    cluster = FcdccCluster(pipe.specs[0].plan, StragglerModel(delays),
+                           mode="threads")
+    try:
+        cluster.load_pipeline(pipe)
+        x = jnp.asarray(RNG.standard_normal((2, 2, 12, 12)), jnp.float32)
+        rnd = cluster.dispatch_pipeline_layer(0, x)
+        assert not cluster.round_ready(rnd)
+        assert cluster.collect(rnd.pending, rnd.spec.plan.delta,
+                               block=False) is None
+        deadline = time.perf_counter() + 30.0
+        while not cluster.round_ready(rnd):
+            assert time.perf_counter() < deadline
+            time.sleep(0.01)
+        y, timing = cluster.collect_pipeline_layer(rnd)
+        ref, _ = cluster.run_pipeline_layer(0, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+        assert len(timing.used_workers) == rnd.spec.plan.delta
+    finally:
+        cluster.shutdown()
+
+
+def test_split_equals_run_pipeline_layer_bitwise():
+    """collect(dispatch(...)) is bit-identical to run_pipeline_layer under
+    a forced survivor subset (same shards, same fp32 reduction order)."""
+    pipe = _pipeline()
+    straggler, _ = _forced_survivors(pipe)
+    cluster = FcdccCluster(pipe.specs[0].plan, straggler, mode="threads")
+    try:
+        cluster.load_pipeline(pipe)
+        x = jnp.asarray(RNG.standard_normal((2, 2, 12, 12)), jnp.float32)
+        y1, _ = cluster.collect_pipeline_layer(
+            cluster.dispatch_pipeline_layer(0, x))
+        y2, _ = cluster.run_pipeline_layer(0, x)
+        assert np.array_equal(np.asarray(y1), np.asarray(y2))
+    finally:
+        cluster.shutdown()
+
+
+# -- depth parity ----------------------------------------------------------
+@pytest.mark.parametrize("backend", ["lax", "pallas"])
+@pytest.mark.parametrize("fused", [False, True])
+def test_depth_parity_forced_survivors(backend, fused):
+    """The tentpole's correctness contract: with a forced fastest-delta
+    subset, serving at pipeline_depth 2 and 4 is bit-identical fp32 to
+    depth 1 — pipelining reorders scheduling, never math — and depth 1
+    matches the undistributed pipeline within fp32 tolerance."""
+    xs = _images(4)
+    outs = {}
+    for depth in (1, 2, 4):
+        pipe = _pipeline(backend=backend, fused=fused)
+        straggler, _ = _forced_survivors(pipe, delay=0.05)
+        server = CodedServer(pipe, straggler, mode="threads",
+                             pipeline_depth=depth)
+        with server:
+            outs[depth] = [np.asarray(h.result(timeout=120.0))
+                           for h in server.submit_many(xs)]
+    for depth in (2, 4):
+        for a, b in zip(outs[1], outs[depth]):
+            assert np.array_equal(a, b), (
+                f"depth {depth} not bit-identical to depth 1 "
+                f"({backend}, fused={fused})")
+    ref_pipe = _pipeline(backend=backend, fused=fused)
+    for x, y in zip(xs, outs[1]):
+        np.testing.assert_allclose(
+            y, np.asarray(ref_pipe.run(x[None]))[0], rtol=1e-4, atol=1e-4)
+
+
+# -- queue-wait phase boundary --------------------------------------------
+def test_queue_wait_ends_at_first_dispatch():
+    """Admitted-but-undispatched time counts as QUEUE wait, not execute:
+    with a serial window (depth 1) and a slow critical-path worker, the
+    second request is admitted immediately but dispatched only after the
+    first batch's two rounds finish — its queue wait must cover that span
+    (the seed stamped start_t at admission, reporting ~0)."""
+    pipe = _pipeline(bucket_sizes=(1,))
+    dm = max(spec.plan.delta for spec in pipe.specs)
+    delays = np.zeros(N)
+    delays[dm - 1] = 0.08  # the delta-th shard: every round waits 0.08s
+    server = CodedServer(pipe, StragglerModel(delays), mode="threads",
+                         bucket_sizes=(1,), max_inflight=2, pipeline_depth=1)
+    xs = _images(2)
+    with server:
+        handles = server.submit_many(xs)
+        for h in handles:
+            h.result(timeout=60.0)
+    recs = {r.request_id: r for r in server.metrics.records()}
+    first = recs[handles[0].request_id]
+    second = recs[handles[1].request_id]
+    # both were admitted at the same boundary; only the first dispatched
+    assert first.queue_wait_s < 0.06, first.queue_wait_s
+    assert second.queue_wait_s > 0.10, second.queue_wait_s
+    # the first batch really did spend its two rounds executing
+    assert first.execute_s > 0.12, first.execute_s
+
+
+# -- the window fills ------------------------------------------------------
+def test_late_admission_dispatches_while_round_in_flight():
+    """A request arriving while an earlier batch's round is mid-flight is
+    dispatched into the free window slot (depth 2) instead of waiting for
+    the collect — the engine's observed window depth must reach 2."""
+    pipe = _pipeline(bucket_sizes=(1,))
+    delays = np.full(N, 0.15)  # slow rounds: the window visibly fills
+    server = CodedServer(pipe, StragglerModel(delays), mode="threads",
+                         bucket_sizes=(1,), pipeline_depth=2)
+    xs = _images(2)
+    with server:
+        h1 = server.submit(xs[0])
+        time.sleep(0.05)  # round 1 of batch 1 is in flight
+        h2 = server.submit(xs[1])
+        y1 = np.asarray(h1.result(timeout=60.0))
+        y2 = np.asarray(h2.result(timeout=60.0))
+        depth_seen = server.overlap_stats().max_depth
+    assert depth_seen == 2, depth_seen
+    ref = _pipeline(bucket_sizes=(1,))
+    np.testing.assert_allclose(y1, np.asarray(ref.run(xs[0][None]))[0],
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(y2, np.asarray(ref.run(xs[1][None]))[0],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_overlap_stats_phases_recorded():
+    """Every collected round leaves one phase tuple; the busy span closes
+    when the window drains; serial_s is the sum of the four phases."""
+    pipe = _pipeline(bucket_sizes=(1,))
+    server = CodedServer(pipe, StragglerModel.none(N), mode="simulated",
+                         bucket_sizes=(1,), pipeline_depth=2)
+    xs = _images(3)
+    with server:
+        for h in server.submit_many(xs):
+            h.result(timeout=60.0)
+        stats = server.overlap_stats()
+    assert stats.rounds == len(xs) * len(pipe.specs)
+    assert stats.busy_wall_s > 0
+    assert stats.serial_s == pytest.approx(
+        stats.dispatch_s + stats.worker_s + stats.collect_s
+        + stats.transition_s)
+    assert np.isfinite(stats.overlap_efficiency)
+
+
+# -- coalescing vs in-flight rounds ---------------------------------------
+def test_coalesce_skips_dispatched_batches():
+    """A batch whose round is in flight has stale ``x`` — it must never be
+    merged; once its collect lands (dispatched=False) it merges again."""
+    pipe = _pipeline(bucket_sizes=(1, 2, 4))
+    sched = Scheduler(pipe.pad_to_bucket, max_batch=4, max_inflight=4)
+    for x in _images(2):
+        sched.queue.submit(x)
+    a = sched.admit(limit=1)
+    b = sched.admit(limit=1)
+    assert a is not None and b is not None and len(sched.inflight) == 2
+    a.dispatched = True
+    assert sched.coalesce() == 0
+    assert len(sched.inflight) == 2
+    a.dispatched = False
+    assert sched.coalesce() == 1
+    assert len(sched.inflight) == 1 and sched.inflight[0].real == 2
+
+
+# -- mid-flight cancellation ----------------------------------------------
+def test_shutdown_no_drain_abandons_inflight_rounds():
+    """shutdown(drain=False) with rounds in flight sheds the window
+    immediately: requests fail with RuntimeError and the engine joins
+    without waiting for the slow workers."""
+    pipe = _pipeline(bucket_sizes=(1,))
+    delays = np.full(N, 0.5)
+    server = CodedServer(pipe, StragglerModel(delays), mode="threads",
+                         bucket_sizes=(1,), pipeline_depth=2)
+    server.start()
+    handles = server.submit_many(_images(2))
+    time.sleep(0.1)  # rounds dispatched, none collectable yet
+    t0 = time.perf_counter()
+    server.shutdown(drain=False, timeout=30.0)
+    assert server._thread is None  # engine joined, not wedged
+    for h in handles:
+        with pytest.raises(RuntimeError, match="shut down"):
+            h.result(timeout=5.0)
+    assert time.perf_counter() - t0 < 10.0
+
+
+def test_unregister_no_drain_with_round_in_flight():
+    """unregister_model(drain=False) while the model has a round mid-
+    flight: its requests are cancelled, and the engine finishes the
+    orphaned collect through the PendingRound's captured pipeline — the
+    other model keeps serving correctly afterwards."""
+    pipe_a = _pipeline(bucket_sizes=(1,))
+    pipe_b = _pipeline(bucket_sizes=(1,), layers=STACK_B, seed=3)
+    delays = np.full(N, 0.3)
+    server = CodedServer(straggler=StragglerModel(delays), mode="threads",
+                         bucket_sizes=(1,), pipeline_depth=2)
+    server.register_model("a", pipe_a)
+    server.register_model("b", pipe_b)
+    server.start()
+    try:
+        ha = server.submit(_images(1)[0], "a")
+        time.sleep(0.1)  # a's first round is in flight
+        server.unregister_model("a", drain=False)
+        with pytest.raises(RuntimeError, match="unregistered"):
+            ha.result(timeout=10.0)
+        xb = _images(1, ch=3)[0]
+        yb = np.asarray(server.submit(xb, "b").result(timeout=60.0))
+        ref = _pipeline(bucket_sizes=(1,), layers=STACK_B, seed=3)
+        np.testing.assert_allclose(yb, np.asarray(ref.run(xb[None]))[0],
+                                   rtol=1e-4, atol=1e-4)
+    finally:
+        server.shutdown(timeout=60.0)
+
+
+def test_unregister_drain_waits_for_inflight_round():
+    """unregister_model(drain=True) with a round in flight serves the
+    request to completion before tearing the model down."""
+    pipe = _pipeline(bucket_sizes=(1,))
+    delays = np.full(N, 0.2)
+    server = CodedServer(straggler=StragglerModel(delays), mode="threads",
+                         bucket_sizes=(1,), pipeline_depth=2)
+    server.register_model("a", pipe)
+    server.start()
+    try:
+        h = server.submit(_images(1)[0], "a")
+        time.sleep(0.05)
+        server.unregister_model("a", drain=True, timeout=60.0)
+        assert h.done()
+        y = np.asarray(h.result(timeout=1.0))
+        assert np.all(np.isfinite(y))
+    finally:
+        server.shutdown(timeout=60.0)
+
+
+# -- wait_many + HTTP timeout ---------------------------------------------
+def test_wait_many_shared_condition():
+    pipe = _pipeline()
+    server = CodedServer(pipe, StragglerModel.none(N), mode="simulated")
+    with server:
+        handles = server.submit_many(_images(3))
+        assert server.wait_many(handles, timeout=60.0)
+        assert all(h.done() for h in handles)
+        # empty list: trivially done, no wait
+        assert server.wait_many([], timeout=0.01)
+
+
+def test_wait_many_times_out_on_wedged_engine():
+    pipe = _pipeline()
+    server = CodedServer(pipe, StragglerModel.none(N), mode="simulated")
+    gate = threading.Event()
+    orig = server.cluster.dispatch_pipeline_layer
+
+    def wedged(idx, x, model=None):
+        gate.wait(30.0)
+        return orig(idx, x, model)
+
+    server.cluster.dispatch_pipeline_layer = wedged
+    server.start()
+    try:
+        h = server.submit(_images(1)[0])
+        t0 = time.perf_counter()
+        assert not server.wait_many([h], timeout=0.3)
+        assert 0.25 < time.perf_counter() - t0 < 5.0
+    finally:
+        gate.set()
+        server.shutdown(timeout=60.0)
+
+
+def test_http_504_when_result_times_out():
+    """A request the engine cannot finish within ``result_timeout_s``
+    answers 504 (the handler slot is released; the request itself is not
+    cancelled)."""
+    pipe = _pipeline()
+    server = CodedServer(pipe, StragglerModel.none(N), mode="simulated")
+    gate = threading.Event()
+    orig = server.cluster.dispatch_pipeline_layer
+
+    def wedged(idx, x, model=None):
+        gate.wait(30.0)
+        return orig(idx, x, model)
+
+    server.cluster.dispatch_pipeline_layer = wedged
+    frontend = ServingFrontend(server, port=0, result_timeout_s=0.5)
+    with frontend:
+        body = json.dumps(
+            {"input": np.zeros((2, 12, 12)).tolist()}).encode()
+        req = urllib.request.Request(
+            f"{frontend.url}/v1/infer", data=body,
+            headers={"Content-Type": "application/json"})
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            urllib.request.urlopen(req, timeout=30.0)
+        assert exc.value.code == 504
+        gate.set()  # un-wedge so the frontend's managed drain completes
+
+
+def test_http_bounded_handler_pool():
+    """handler_pool=1 serializes connections through ONE pooled thread
+    (the stock mixin spawned one thread per connection); requests still
+    all answer, and pool_size < 1 is rejected."""
+    pipe = _pipeline()
+    server = CodedServer(pipe, StragglerModel.none(N), mode="simulated")
+    with pytest.raises(ValueError, match="pool_size"):
+        ServingFrontend(CodedServer(_pipeline(), mode="simulated"),
+                        port=0, handler_pool=0)
+    frontend = ServingFrontend(server, port=0, handler_pool=1)
+    with frontend:
+        x = np.asarray(_images(1)[0]).tolist()
+        for _ in range(3):
+            body = json.dumps({"input": x}).encode()
+            req = urllib.request.Request(
+                f"{frontend.url}/v1/infer", data=body,
+                headers={"Content-Type": "application/json"})
+            with urllib.request.urlopen(req, timeout=60.0) as resp:
+                assert resp.status == 200
+                payload = json.loads(resp.read())
+        assert payload["shape"] == list(
+            np.asarray(server.models["default"].pipeline.run(
+                jnp.asarray(x, jnp.float32)[None]))[0].shape)
+        # /v1/stats surfaces the per-phase overlap block per README
+        with urllib.request.urlopen(f"{frontend.url}/v1/stats",
+                                    timeout=30.0) as resp:
+            stats = json.loads(resp.read())
+        ov = stats["aggregate"]["overlap"]
+        assert ov["rounds"] == 3 * len(pipe.specs)
+        assert ov["overlap_efficiency"] is None or ov["overlap_efficiency"] > 0
+        assert "overlap" in stats["per_model"]["default"]
+
+
+# -- construction validation ----------------------------------------------
+def test_pipeline_depth_validation():
+    for bad in (0, -1, 1.5, "2"):
+        with pytest.raises(ValueError, match="pipeline_depth"):
+            CodedServer(_pipeline(), mode="simulated", pipeline_depth=bad)
+    # depth 1 is the classic serial loop and still serves correctly
+    pipe = _pipeline()
+    server = CodedServer(pipe, StragglerModel.none(N), mode="simulated",
+                         pipeline_depth=1)
+    x = _images(1)[0]
+    with server:
+        y = np.asarray(server.submit(x).result(timeout=60.0))
+    ref = _pipeline()
+    np.testing.assert_allclose(y, np.asarray(ref.run(x[None]))[0],
+                               rtol=1e-4, atol=1e-4)

@@ -317,13 +317,13 @@ def test_server_shutdown_timeout_keeps_thread_and_cancels():
     pipe, _ = _pipeline()
     server = CodedServer(pipe, StragglerModel.none(6), mode="simulated")
     gate = threading.Event()
-    orig = server.cluster.run_pipeline_layer
+    orig = server.cluster.dispatch_pipeline_layer
 
     def wedged_layer(idx, x, model=None):
         gate.wait(30.0)  # engine blocks here until the test releases it
         return orig(idx, x, model)
 
-    server.cluster.run_pipeline_layer = wedged_layer
+    server.cluster.dispatch_pipeline_layer = wedged_layer
     server.start()
     h = server.submit(_images(1)[0])
     time.sleep(0.05)  # let the engine pick up the batch and block
@@ -350,13 +350,13 @@ def test_engine_admits_up_to_capacity_per_boundary():
     server = CodedServer(pipe, StragglerModel.none(6), mode="simulated",
                          max_inflight=2)
     inflight_at_advance = []
-    orig = server.cluster.run_pipeline_layer
+    orig = server.cluster.dispatch_pipeline_layer
 
     def spy(idx, x, model=None):
         inflight_at_advance.append(len(server.scheduler["default"].inflight))
         return orig(idx, x, model)
 
-    server.cluster.run_pipeline_layer = spy
+    server.cluster.dispatch_pipeline_layer = spy
     # queue two single-image batches BEFORE the engine starts: the first
     # boundary sees both waiting with both slots free
     handles = [server.scheduler["default"].queue.submit(x)
@@ -573,13 +573,13 @@ def test_fair_share_interleaves_models():
     server.register_model("a", pipe_a)
     server.register_model("b", pipe_b)
     advanced = []
-    orig = server.cluster.run_pipeline_layer
+    orig = server.cluster.dispatch_pipeline_layer
 
     def spy(idx, x, model=None):
         advanced.append(model)
         return orig(idx, x, model)
 
-    server.cluster.run_pipeline_layer = spy
+    server.cluster.dispatch_pipeline_layer = spy
     ha = _prequeue(server, "a", _images(3))
     hb = _prequeue(server, "b", _images_b(3))
     with server:
@@ -604,13 +604,13 @@ def test_weighted_fair_share_round_ratio_and_starvation_bound():
     server.register_model("a", pipe_a, weight=2)
     server.register_model("b", pipe_b, weight=1)
     advanced = []
-    orig = server.cluster.run_pipeline_layer
+    orig = server.cluster.dispatch_pipeline_layer
 
     def spy(idx, x, model=None):
         advanced.append(model)
         return orig(idx, x, model)
 
-    server.cluster.run_pipeline_layer = spy
+    server.cluster.dispatch_pipeline_layer = spy
     ha = _prequeue(server, "a", _images(4))
     hb = _prequeue(server, "b", _images_b(4))
     with server:
