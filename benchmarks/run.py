@@ -14,7 +14,7 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sizes (slow)")
-    ap.add_argument("--only", default=None, help="comma list: exp1..exp12,roofline")
+    ap.add_argument("--only", default=None, help="comma list: exp1..exp13,roofline")
     ap.add_argument("--batch", type=int, default=4,
                     help="batch size for the coded-pipeline sections (exp1/exp4)")
     args = ap.parse_args()
@@ -34,6 +34,7 @@ def main() -> None:
         exp10_kernel_roofline,
         exp11_device_pool,
         exp12_overlap,
+        exp13_lm_decode,
         roofline_report,
     )
 
@@ -50,6 +51,7 @@ def main() -> None:
         "exp10": exp10_kernel_roofline.run,
         "exp11": exp11_device_pool.run,
         "exp12": exp12_overlap.run,
+        "exp13": exp13_lm_decode.run,
         "roofline": roofline_report.run,
     }
     print("name,us_per_call,derived")

@@ -33,7 +33,13 @@
 # aggregate throughput under a staggered fixed-straggler Poisson cell,
 # with single-shot forced-survivor bit-parity across depths 1/2/4, equal
 # worker trace counts per depth, and no >10% regression vs the committed
-# BENCH_serving.json trajectory).
+# BENCH_serving.json trajectory), the coded-LM device-pool decode parity
+# test (skipped in the single-device main run), and the coded LM decode
+# smoke benchmark (exp13, asserts coded decode tokens/s >= 1.5x the
+# uncoded straggler-bound baseline under a fixed 1-of-n straggler with
+# exact token parity vs the undistributed reference decoder on every
+# attempt, and no >10% regression vs the committed BENCH_lm.json
+# trajectory).
 # Extra args are passed through to the main pytest run.
 #
 # Tests run with a per-test watchdog (tests/conftest.py, REPRO_TEST_TIMEOUT
@@ -68,5 +74,9 @@ python -m benchmarks.exp10_kernel_roofline --smoke
 # device pool: multi-device parity tests + throughput/regression gate
 export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
 python -m pytest -x -q tests/test_device_pool.py
+# coded LM decode: device-pool decode parity runs here (it skips on a
+# single-device jax), perf gate vs the committed BENCH_lm trajectory after
+python -m pytest -x -q tests/test_coded_decoder.py -k "device_pool"
 python -m benchmarks.exp11_device_pool --smoke
 python -m benchmarks.exp12_overlap --smoke
+python -m benchmarks.exp13_lm_decode --smoke

@@ -3,8 +3,11 @@
 For every program the pipeline family can build — CNN archs x batch
 buckets x {lax, pallas} backends x {fused, unfused} transitions, in both
 the single-process (``direct``) and threaded-runtime (``cluster``)
-execution modes — this module traces the program on ``ShapeDtypeStruct``
-arguments (``CodedPipeline.program_space``; no data runs) and checks:
+execution modes, plus the coded LM decoder's decode-step program space
+({coded, uncoded} plans x backends, worker GEMM rounds and master-side
+glue alike) — this module traces the program on ``ShapeDtypeStruct``
+arguments (``CodedPipeline.program_space`` /
+``CodedDecoderPipeline.program_space``; no data runs) and checks:
 
 - ``JIT-BAKED-CONST`` (error): decode-inverse / encode-column matrices
   must enter traced programs as *runtime arguments*, never baked
@@ -324,16 +327,67 @@ def check_trace_bound(pipe, cells: Iterable, label: str) -> Report:
     return report
 
 
+# -- LM decoder program space ------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DecoderContractConfig:
+    """One coded-LM-decoder family member: the decoder program space gets
+    the same jit contracts as the ConvL pipelines — coding matrices as
+    runtime args, no f64, no host callbacks, decode-step worker traces
+    bounded by (GEMM geometry x bucket)."""
+
+    plan_kind: str  # "coded" | "uncoded"
+    backend: str  # "lax" | "pallas"
+    n: int = 4
+    k_b: int = 4
+    buckets: tuple = (1, 2)
+
+    @property
+    def label(self) -> str:
+        return f"lm-decoder/{self.backend}/{self.plan_kind}"
+
+
+def iter_decoder_configs(
+    backends: Sequence[str] = ("lax", "pallas"),
+) -> list[DecoderContractConfig]:
+    return [
+        DecoderContractConfig(kind, backend)
+        for backend in backends
+        for kind in ("coded", "uncoded")
+    ]
+
+
+def build_decoder_pipeline(cfg: DecoderContractConfig):
+    """The smoke LM config with zero weights (shape space only)."""
+    import jax
+
+    from repro.configs import smollm_135m
+    from repro.core.decoder_pipeline import (UncodedPlan,
+                                             build_lm_decoder_pipeline)
+
+    bundle = smollm_135m.smoke()
+    params = jax.tree.map(
+        lambda s: np.zeros(s.shape, np.float32),
+        bundle.param_shapes(np.float32),
+    )
+    plan = UncodedPlan(cfg.n) if cfg.plan_kind == "uncoded" else None
+    return build_lm_decoder_pipeline(
+        bundle.cfg, params, cfg.n,
+        k_b=None if plan else cfg.k_b, plan=plan,
+        backend=cfg.backend, interpret=True,
+        bucket_sizes=cfg.buckets, max_len=32,
+    )
+
+
 # -- driver -----------------------------------------------------------------
 
-def analyze_config(cfg: ContractConfig) -> Report:
-    """Trace and check every program cell of one pipeline config."""
+def _analyze(pipe, label: str) -> Report:
+    """Trace and check every program cell of one pipeline's shape space."""
     import jax
 
     report = Report()
-    pipe = build_pipeline(cfg)
     cells = list(pipe.program_space())
-    report.extend(check_trace_bound(pipe, cells, cfg.label))
+    report.extend(check_trace_bound(pipe, cells, label))
     seen: set = set()
     checked = 0
     for cell in cells:
@@ -347,27 +401,41 @@ def analyze_config(cfg: ContractConfig) -> Report:
         jaxpr = jax.make_jaxpr(cell.fn)(*cell.args)
         for f in check_jaxpr_contracts(cell, jaxpr):
             report.findings.append(
-                dataclasses.replace(f, location=f"{cfg.label}/{f.location}")
+                dataclasses.replace(f, location=f"{label}/{f.location}")
             )
         if cell.donate_argnums:
             for f in check_donation(cell):
                 report.findings.append(
                     dataclasses.replace(
-                        f, location=f"{cfg.label}/{f.location}")
+                        f, location=f"{label}/{f.location}")
                 )
         checked += 1
-    report.stats[f"{cfg.label}/programs_checked"] = checked
+    report.stats[f"{label}/programs_checked"] = checked
     return report
+
+
+def analyze_config(cfg: ContractConfig) -> Report:
+    """Trace and check every program cell of one CNN pipeline config."""
+    return _analyze(build_pipeline(cfg), cfg.label)
+
+
+def analyze_decoder_config(cfg: DecoderContractConfig) -> Report:
+    """Trace and check every program cell of one LM decoder config."""
+    return _analyze(build_decoder_pipeline(cfg), cfg.label)
 
 
 def run(
     archs: Sequence[str] | None = None,
     backends: Sequence[str] = ("lax", "pallas"),
 ) -> Report:
-    """Run the contract analyzer over the full pipeline family."""
+    """Run the contract analyzer over the full pipeline family: every CNN
+    config plus the coded-LM-decoder program space."""
     report = Report()
     configs = iter_configs(archs, backends)
     for cfg in configs:
         report.extend(analyze_config(cfg))
-    report.stats["contract_configs"] = len(configs)
+    decoder_configs = iter_decoder_configs(backends)
+    for dcfg in decoder_configs:
+        report.extend(analyze_decoder_config(dcfg))
+    report.stats["contract_configs"] = len(configs) + len(decoder_configs)
     return report

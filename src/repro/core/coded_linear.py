@@ -44,6 +44,10 @@ class CodedLinear:
         self.t, self.d_in, self.d_out = t, d_in, d_out
         self.tb = t // plan.k_a
         self.ob = d_out // plan.k_b
+        self.weight_encode_calls = 0
+        self._we_src = None  # identity key of the cached coded weights
+        self._we = None
+        self._decode_cache: dict = {}  # survivor subset -> Q x Q inverse
 
     # -- master ---------------------------------------------------------
     def encode_inputs(self, x: jnp.ndarray) -> jnp.ndarray:
@@ -52,6 +56,7 @@ class CodedLinear:
         return group_by_worker(coded, self.a_code.ell)  # (n, ell_a, tb, d_in)
 
     def encode_weights(self, w: jnp.ndarray) -> jnp.ndarray:
+        self.weight_encode_calls += 1
         parts = w.reshape(self.d_in, self.plan.k_b, self.ob).swapaxes(0, 1)
         coded = encode_tensor_list(parts, self.b_code.matrix)
         return group_by_worker(coded, self.b_code.ell)  # (n, ell_b, d_in, ob)
@@ -65,19 +70,47 @@ class CodedLinear:
         )
 
     # -- master: decode ---------------------------------------------------
-    def decode(self, worker_ids, outputs):
-        e = recovery_matrix(self.a_code, self.b_code, list(worker_ids))
-        d = jnp.asarray(np.linalg.inv(e.T), outputs.dtype)
+    def decode_matrix(self, worker_ids) -> np.ndarray:
+        """Host-side Q x Q decode inverse for a survivor subset, cached per
+        subset.  Callers on a hot path compute this once per observed
+        subset and pass it to ``decode`` as a runtime argument."""
+        key = tuple(worker_ids)
+        d = self._decode_cache.get(key)
+        if d is None:
+            e = recovery_matrix(self.a_code, self.b_code, list(key))
+            d = self._decode_cache[key] = np.linalg.inv(e.T).astype(
+                np.float32)
+        return d
+
+    def decode(self, worker_ids, outputs, decode_inverse=None):
+        """Reconstruct Y from the fastest delta workers' outputs.
+
+        ``decode_inverse`` is the Q x Q inverse as a *runtime* array: inside
+        a jitted caller the survivor subset then never retraces (and the
+        per-call host ``recovery_matrix`` + ``np.linalg.inv`` round trip is
+        gone).  When omitted it is looked up from the per-subset cache.
+        """
+        if decode_inverse is None:
+            decode_inverse = self.decode_matrix(worker_ids)
+        d = jnp.asarray(decode_inverse, outputs.dtype)
         q = self.plan.k_a * self.plan.k_b
         rows = outputs.reshape(q, -1)
         blocks = (d @ rows).reshape(q, self.tb, self.ob)
         grid = blocks.reshape(self.plan.k_a, self.plan.k_b, self.tb, self.ob)
         return jnp.transpose(grid, (0, 2, 1, 3)).reshape(self.t, self.d_out)
 
-    def run_simulated(self, x, w, worker_ids=None):
+    def encoded_weights(self, w: jnp.ndarray) -> jnp.ndarray:
+        """Encode-once cache keyed on the weight array's identity: repeated
+        calls with the same resident W reuse the coded copy."""
+        if self._we_src is not w:
+            self._we = self.encode_weights(w)
+            self._we_src = w
+        return self._we
+
+    def run_simulated(self, x, w, worker_ids=None, decode_inverse=None):
         ids = list(range(self.plan.delta)) if worker_ids is None else list(worker_ids)
         xe = self.encode_inputs(x)
-        we = self.encode_weights(w)
+        we = self.encoded_weights(w)
         idx = jnp.asarray(ids)
         outs = jax.vmap(self.worker_compute)(xe[idx], we[idx])
-        return self.decode(ids, outs)
+        return self.decode(ids, outs, decode_inverse)

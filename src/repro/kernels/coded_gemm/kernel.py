@@ -1,10 +1,15 @@
-"""CRME encode/decode as a skinny GEMM Pallas kernel.
+"""CRME encode/decode as a skinny GEMM on the shared matmul lowering.
 
 Both NSCTC phases are ``small code matrix (Q x Q or k x 2n) @ wide feature
-matrix (rows x F)`` products.  The code matrix fits entirely in VMEM, so the
-kernel blocks only over the feature axis: grid = (F/bf,), each program does
-one (rows_out x rows_in) @ (rows_in x bf) MXU call and a single HBM write.
-This is the fused "tensor-list x matrix" primitive of eq. (18)/(45).
+matrix (rows x F)`` products.  ``coded_gemm_pallas`` rides the
+multi-buffered ``matmul_pallas`` lowering (async-DMA operand streaming,
+autotunable tiles) instead of carrying its own single-purpose kernel: the
+code matrix always fits one K tile, so the accumulation order — one MXU
+dot per feature tile — is identical to the legacy lowering and the outputs
+are bit-equal (tests/test_kernels.py proves it).
+
+``coded_gemm_pallas_legacy`` keeps the original feature-axis-only kernel
+as the parity reference.
 """
 from __future__ import annotations
 
@@ -14,7 +19,32 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["coded_gemm_pallas"]
+from repro.kernels.matmul.kernel import matmul_pallas
+
+__all__ = ["coded_gemm_pallas", "coded_gemm_pallas_legacy"]
+
+
+def coded_gemm_pallas(
+    code: jnp.ndarray,
+    feats: jnp.ndarray,
+    *,
+    interpret: bool = True,
+    bm: int = 128,
+    bn: int = 512,
+    bk: int = 128,
+    num_buffers: int = 2,
+) -> jnp.ndarray:
+    """``code`` (R_out, R_in) @ ``feats`` (R_in, F) -> (R_out, F).
+
+    R_* are code dimensions (tiny — the whole code matrix fits one
+    (bm, bk) tile after padding); F is the flattened tensor-block feature
+    axis.  Tile kwargs default to the legacy shape (one row-block, 512-wide
+    feature tiles) and are overridable from the autotune ledger.
+    """
+    return matmul_pallas(
+        code, feats, bm=bm, bn=bn, bk=bk,
+        interpret=interpret, num_buffers=num_buffers,
+    )
 
 
 def _coded_kernel(m_ref, t_ref, o_ref):
@@ -24,18 +54,15 @@ def _coded_kernel(m_ref, t_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("bf", "interpret"))
-def coded_gemm_pallas(
+def coded_gemm_pallas_legacy(
     code: jnp.ndarray,
     feats: jnp.ndarray,
     *,
     bf: int = 512,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """``code`` (R_out, R_in) @ ``feats`` (R_in, F) -> (R_out, F).
-
-    R_* are code dimensions (tiny, <= 8*128 keeps the whole code matrix in
-    one VMEM tile); F is the flattened tensor-block feature axis.
-    """
+    """The pre-rebase lowering (feature-axis grid only): kept as the
+    bit-parity reference for the matmul-backed path."""
     r_out, r_in = code.shape
     r_in2, f = feats.shape
     assert r_in == r_in2

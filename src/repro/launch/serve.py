@@ -45,13 +45,21 @@ def serve_lm(arch: str, *, batch: int, prompt_len: int, gen: int, smoke: bool,
         cache = bundle.make_cache(batch, max_len, param_dtype)
         decode = jax.jit(bundle.decode_fn, donate_argnums=(1,))
 
-        # prefill by stepping the decoder over the prompt (cache warm-up);
-        # attention-free archs carry recurrent state the same way.
+        # prefill: one batched jitted pass fills the whole prompt's cache
+        # (families without a cache-filling prefill — recurrent state that
+        # only advances one token at a time — fall back to stepping the
+        # decoder over the prompt).
         t0 = time.time()
-        for t in range(prompt_len):
-            logits, cache = decode(
-                params, cache, {"tokens": prompts[:, t : t + 1], "pos": jnp.int32(t)}
-            )
+        if prompt_len > 0 and bundle.prefill_cache_fn is not None:
+            pf = jax.jit(bundle.prefill_cache_fn, donate_argnums=(1,))
+            logits, cache = pf(params, cache, {"tokens": prompts})
+            jax.block_until_ready(logits)
+        else:
+            for t in range(prompt_len):
+                logits, cache = decode(
+                    params, cache,
+                    {"tokens": prompts[:, t : t + 1], "pos": jnp.int32(t)},
+                )
         prefill_s = time.time() - t0
 
         out_tokens = []

@@ -35,6 +35,10 @@ class ModelBundle:
     make_cache: Callable  # (batch, max_len) -> cache pytree
     cache_axes: Callable  # (cache_leaf_path_free) -> same-tree of axes tuples
     batch_axes: Callable  # (batch dict) -> same-tree of axes tuples
+    # (params, cache, batch) -> (logits (B,P,V), filled cache): one jitted
+    # cache-filling prompt pass; None for families without one (the serve
+    # loop falls back to stepping the decoder over the prompt).
+    prefill_cache_fn: Optional[Callable] = None
 
     def init(self, key, dtype=jnp.bfloat16):
         return schema_init(self.schema, key, dtype)
@@ -104,6 +108,9 @@ def make_lm_bundle(cfg: lm.LMConfig, family="lm", prefix: tuple[int, int] | None
     def decode_fn(params, cache, batch):
         return lm.decode_step(params, cfg, cache, batch["tokens"], batch["pos"])
 
+    def prefill_cache_fn(params, cache, batch):
+        return lm.prefill(params, cfg, cache, batch["tokens"])
+
     return ModelBundle(
         name=cfg.name,
         family=family,
@@ -117,6 +124,7 @@ def make_lm_bundle(cfg: lm.LMConfig, family="lm", prefix: tuple[int, int] | None
         make_cache=lambda b, s, dtype=jnp.bfloat16: lm.init_cache(cfg, b, s, dtype),
         cache_axes=_kv_cache_axes,
         batch_axes=_token_batch_axes,
+        prefill_cache_fn=prefill_cache_fn,
     )
 
 

@@ -338,12 +338,15 @@ def _use_ring_cache(n_kv_heads: int) -> bool:
 
 
 def _ring_write(cache, new, pos, ring: bool = True):
-    """Write ``new`` (B, 1, ...) into slot ``pos`` of ``cache`` (B, S, ...).
+    """Write ``new`` (B, S_new, ...) into ``cache`` (B, S, ...) starting at
+    slot ``pos`` (the position of ``new``'s first row).
 
-    ring=True: select against an iota — zero-collective under any sharding
-    of S.  ring=False: dynamic-update-slice (cheaper HBM-wise; requires the
-    cache NOT to be sharded along S)."""
-    if not ring or os.environ.get("REPRO_BASELINE") == "1":
+    For single-token decode writes (S_new == 1), ring=True selects against
+    an iota — zero-collective under any sharding of S; ring=False is a
+    dynamic-update-slice (cheaper HBM-wise; requires the cache NOT to be
+    sharded along S).  Multi-token writes (batched prefill) always take the
+    slice path: one contiguous store beats S_new selects."""
+    if new.shape[1] > 1 or not ring or os.environ.get("REPRO_BASELINE") == "1":
         return jax.lax.dynamic_update_slice_in_dim(
             cache, new.astype(cache.dtype), pos, axis=1
         )
@@ -365,7 +368,7 @@ def _gqa_attn(w, x, cfg: LMConfig, rope, q_pos, k_pos, window, cache=None):
     q = apply_rope(q, rope, q_pos)
     k = apply_rope(k, rope, q_pos)
     if cache is not None:
-        pos = q_pos[0, 0]  # decode: same position across batch
+        pos = q_pos[0, 0]  # first query position (same across batch)
         # §Perf: where-based write instead of dynamic-update-slice — fully
         # shardable along the (model-sharded) sequence axis, so GSPMD never
         # all-gathers the cache (the DUS resharding pathology).
@@ -582,6 +585,42 @@ def decode_step(params, cfg: LMConfig, cache, tokens, pos):
     q_pos = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
     k_pos = jnp.broadcast_to(jnp.arange(max_len, dtype=jnp.int32), (b, max_len))
     # mask out not-yet-written cache slots via the causal test k_pos <= q_pos
+    rope_dim = cfg.mla.qk_rope_dim if cfg.attn == "mla" else cfg.head_dim
+    rope = rope_inv_freq(rope_dim, cfg.rope_base)
+
+    n_moe = (cfg.layers - cfg.n_dense_layers) if cfg.moe else 0
+    n_dense = cfg.layers - n_moe
+    new_cache = {}
+    if n_dense:
+        wins = _layer_windows(cfg, n_dense)
+        x, nc = _run_stack(
+            params["dense_layers"], x, cfg, rope, q_pos, k_pos, False,
+            cache["dense"], wins,
+        )
+        new_cache["dense"] = nc
+    if n_moe:
+        wins = _layer_windows(cfg, n_moe, offset=n_dense)
+        x, nc = _run_stack(
+            params["moe_layers"], x, cfg, rope, q_pos, k_pos, True,
+            cache["moe"], wins,
+        )
+        new_cache["moe"] = nc
+    return _unembed(params, cfg, x), new_cache
+
+
+def prefill(params, cfg: LMConfig, cache, tokens):
+    """Batched cache-filling prefill: one full-sequence pass that writes
+    every prompt position's K/V into ``cache`` in a single jitted step.
+
+    tokens: (B, P) -> (logits (B, P, V), filled cache).  Equivalent to P
+    ``decode_step`` calls (same cache semantics: causal mask over the full
+    ``max_len`` axis, positions 0..P-1 written) but one program — the step
+    loop is only needed for generation."""
+    x = _embed(params, cfg, tokens)
+    b, s, _ = x.shape
+    max_len = jax.tree.leaves(cache)[0].shape[2]
+    q_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    k_pos = jnp.broadcast_to(jnp.arange(max_len, dtype=jnp.int32), (b, max_len))
     rope_dim = cfg.mla.qk_rope_dim if cfg.attn == "mla" else cfg.head_dim
     rope = rope_inv_freq(rope_dim, cfg.rope_base)
 

@@ -3,6 +3,7 @@
 metrics + stdlib HTTP front-end."""
 from .engine import CodedServer
 from .frontend import ServingFrontend
+from .lm_engine import CodedLMServer, pack_request, unpack_request
 from .metrics import (
     MetricsCollector,
     OverlapStats,
@@ -21,6 +22,9 @@ from .scheduler import (
 
 __all__ = [
     "CodedServer",
+    "CodedLMServer",
+    "pack_request",
+    "unpack_request",
     "ServingFrontend",
     "MetricsCollector",
     "OverlapStats",
